@@ -1,0 +1,44 @@
+"""Benchmark harness entrypoint — one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline table
+(`python -m benchmarks.roofline`) reads the dry-run artifacts instead.
+"""
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("load_balance", "benchmarks.bench_load_balance", "paper Table 3"),
+    ("recall_candidates", "benchmarks.bench_recall_candidates", "paper Fig 3"),
+    ("iterations", "benchmarks.bench_iterations", "paper Fig 4 / Table 4"),
+    ("xml", "benchmarks.bench_xml", "paper Tables 1-2"),
+    ("distributed", "benchmarks.bench_distributed", "paper Figs 5-6"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod, what in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            importlib.import_module(mod).run(csv=True)
+            print(f"# {name} ({what}) done in {time.time()-t0:.0f}s",
+                  file=sys.stderr)
+        except Exception as e:
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

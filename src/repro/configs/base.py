@@ -1,0 +1,92 @@
+"""Config/arch registry protocol.
+
+Every architecture module exposes ``get_arch() -> ArchDef``. An ArchDef is
+everything launch/dryrun.py needs to lower a (arch × shape) cell on any mesh:
+
+  - abstract_params(): ShapeDtypeStruct tree (no allocation)
+  - rules(): ShardRules mapping param paths -> PartitionSpec
+  - opt: optimizer kind for train cells ("adamw" | "adafactor" | None)
+  - cells(): {shape_name: CellDef}; CellDef.skip explains spec-sanctioned
+    skips (e.g. long_500k on pure full-attention archs).
+
+Input specs are functions of the mesh so batch axes adapt to single/multi-pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.module import ShardRules
+
+
+@dataclasses.dataclass
+class CellDef:
+    kind: str                                   # "train" | "serve"
+    inputs: Optional[Callable[[Any], dict]] = None   # mesh -> {name: SDS}
+    in_specs: Optional[Callable[[Any], dict]] = None  # mesh -> {name: P}
+    step: Optional[Callable[[], Callable]] = None     # () -> step fn
+    skip: Optional[str] = None                  # reason if cell is skipped
+    note: str = ""
+    params: Optional[Callable[[Any], Any]] = None       # mesh -> SDS override
+    param_specs: Optional[Callable[[Any, Any], Any]] = None  # (mesh, sds) -> P tree
+    step_with_mesh: bool = False                # step(mesh) instead of step()
+
+
+@dataclasses.dataclass
+class ArchDef:
+    name: str
+    family: str
+    abstract_params: Callable[[], Any]
+    rules: Callable[[], ShardRules]
+    cells: dict[str, CellDef]
+    opt: str = "adamw"
+    opt_kw: dict = dataclasses.field(default_factory=dict)
+    model_flops_per_token: Optional[int] = None   # 6*N(_active) for LM
+    notes: str = ""
+
+
+def dp(mesh) -> tuple:
+    """Data-parallel axes tuple for PartitionSpecs: ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = 1
+    for a in dp(mesh):
+        out *= sizes[a]
+    return out
+
+
+def grid_axes(mesh) -> tuple:
+    """All mesh axes flattened (for row-sharding giant embedding tables)."""
+    return tuple(mesh.axis_names)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ------------------------------------------------------------ ZeRO states ---
+def zero_state_spec(param_spec: P, shape: tuple, data_axis: str = "data",
+                    axis_size: int = 16) -> P:
+    """Additionally shard an optimizer-state leaf over the data axis: pick the
+    first dim that is unsharded and divisible (ZeRO-1/2 style)."""
+    spec = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = set()
+    for s in spec:
+        if s is None:
+            continue
+        for a in (s if isinstance(s, tuple) else (s,)):
+            used.add(a)
+    if data_axis in used:
+        return P(*spec)
+    for i, s in enumerate(spec):
+        if s is None and shape[i] % axis_size == 0 and shape[i] >= axis_size:
+            spec[i] = data_axis
+            return P(*spec)
+    return P(*spec)

@@ -1,0 +1,51 @@
+"""bst [arXiv:1905.06874]: Behavior Sequence Transformer (Alibaba) —
+embed_dim=32 seq_len=20 1 transformer block 8 heads, MLP 1024-512-256."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, dp, grid_axes, sds
+from repro.configs import recsys_common as RC
+from repro.models.module import ShardRules
+from repro.models.recsys import BSTConfig, bst_init, bst_apply
+
+CONFIG = BSTConfig(item_vocab=1_048_576, other_vocab=100_000)
+
+
+def _apply(params, batch):
+    return bst_apply(params, CONFIG, batch["hist_items"], batch["target_item"],
+                     batch["other_ids"])
+
+
+def _inputs(batch):
+    return {"hist_items": sds((batch, CONFIG.seq_len), jnp.int32),
+            "target_item": sds((batch,), jnp.int32),
+            "other_ids": sds((batch, CONFIG.n_other_feats), jnp.int32),
+            "label": sds((batch,))}
+
+
+def _specs(mesh, batch):
+    ax = dp(mesh) if batch <= 65536 else grid_axes(mesh)
+    return {"hist_items": P(ax, None), "target_item": P(ax),
+            "other_ids": P(ax, None), "label": P(ax)}
+
+
+def _rules():
+    return ShardRules([
+        (r"item_emb/table", P(("data", "model"), None)),
+        (r"item_table/table", P(("data", "model"), None)),
+        (r".*", P()),
+    ])
+
+
+def get_arch() -> ArchDef:
+    cells = RC.ctr_cells(_inputs, _specs, _apply)
+    cells["retrieval_cand"] = RC.retrieval_cell(CONFIG.embed_dim)
+    return ArchDef(
+        name="bst", family="recsys",
+        abstract_params=lambda: jax.eval_shape(
+            lambda: bst_init(jax.random.PRNGKey(0), CONFIG)),
+        rules=_rules, cells=cells, opt="adamw_nomaster",
+        notes="transformer-over-behavior-sequence; bidirectional attention")

@@ -1,0 +1,69 @@
+"""dlrm-mlperf [arXiv:1906.00091]: MLPerf DLRM (Criteo 1TB) — 13 dense +
+26 sparse features, embed_dim 128, bot MLP 13-512-256-128, top MLP
+1024-1024-512-256-1, dot interaction. Vocab sizes: Criteo-1TB with the
+MLPerf 40M row cap; total 204,184,588 rows padded (+500) to /512.
+
+Embedding rows are sharded over the ("data","model") grid (the MLPerf
+model-parallel embedding layout); dense MLPs replicated; batch over
+("pod","data") for train, over the full grid for bulk serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, CellDef, dp, grid_axes, sds
+from repro.configs import recsys_common as RC
+from repro.models.module import ShardRules
+from repro.models.recsys import DLRMConfig, dlrm_init, dlrm_apply
+
+CONFIG = DLRMConfig()
+_PAD_ROWS = (-CONFIG.total_rows) % 512
+_VOCABS = list(CONFIG.vocab_sizes[:-1]) + [CONFIG.vocab_sizes[-1] + _PAD_ROWS]
+_OFFSETS = np.asarray([0] + list(np.cumsum(_VOCABS)[:-1]), np.int32)
+TOTAL_ROWS = int(sum(_VOCABS))
+
+
+def _init(key):
+    import dataclasses
+    cfg = dataclasses.replace(CONFIG, vocab_sizes=tuple(_VOCABS))
+    params, _ = dlrm_init(key, cfg)
+    return params
+
+
+def _apply(params, batch):
+    offsets = jnp.asarray(_OFFSETS)
+    return dlrm_apply(params, CONFIG, offsets, batch["dense"], batch["sparse"])
+
+
+def _inputs(batch):
+    return {"dense": sds((batch, CONFIG.n_dense)),
+            "sparse": sds((batch, CONFIG.n_sparse), jnp.int32),
+            "label": sds((batch,))}
+
+
+def _specs(mesh, batch):
+    ax = dp(mesh) if batch <= 65536 else grid_axes(mesh)
+    return {"dense": P(ax, None), "sparse": P(ax, None), "label": P(ax)}
+
+
+def _rules():
+    return ShardRules([
+        (r"tables/mega/table", P(("data", "model"), None)),
+        (r"item_table/table", P(("data", "model"), None)),
+        (r"(bot|top)/fc\d+/(kernel|bias)", P()),
+    ])
+
+
+def get_arch() -> ArchDef:
+    cells = RC.ctr_cells(_inputs, _specs, _apply)
+    cells["retrieval_cand"] = RC.retrieval_cell(CONFIG.embed_dim)
+    return ArchDef(
+        name="dlrm-mlperf", family="recsys",
+        abstract_params=lambda: jax.eval_shape(
+            lambda: _init(jax.random.PRNGKey(0))),
+        rules=_rules, cells=cells, opt="adamw_nomaster",
+        notes=f"mega-table {TOTAL_ROWS} rows x 128 (~{TOTAL_ROWS*128*4/2**30:.0f} GiB fp32) "
+              "row-sharded over grid; IRLI accelerates retrieval_cand")

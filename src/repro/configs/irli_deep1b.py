@@ -1,0 +1,120 @@
+"""irli-deep1b — the PAPER'S OWN production configuration (§5.3) on the
+assigned meshes: 100M (padded to 2^27 ≈ 134M) 96-d vectors, B=20000 buckets,
+R=32 scorer repetitions, hidden 1024.
+
+Mapping (DESIGN §3/§5): the paper's P=8 corpus shards generalize to the full
+("pod","data") product; the R=32 reps ride the stacked-param leading axis
+(sharded over "model" -> 2 reps/chip column). Cells:
+
+  train_scorers   scorer BCE train step on 1M-query batches (train)
+  serve_query     sharded multiprobe search, batch 4096 queries (serve)
+
+These two extra cells put the paper's actual workload on the production mesh
+alongside the 40 assigned-architecture cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, CellDef, dp, sds
+from repro.core.network import ScorerConfig, scorer_init
+from repro.launch import steps as S
+from repro.models.module import ShardRules
+
+D = 96
+B_BUCKETS = 20000
+R = 32
+HIDDEN = 1024
+N_CORPUS = 1 << 27           # 134,217,728 (assigned 100M padded to 2^27)
+K_NEIGH = 100                 # paper: 100 exact NNs as labels
+MAX_LOAD = 2 * (N_CORPUS // (256 * B_BUCKETS))  # per-shard bucket load bound
+
+SCORER_CFG = ScorerConfig(d_in=D, d_hidden=HIDDEN, n_buckets=B_BUCKETS,
+                          n_reps=R, loss="softmax_bce")
+
+
+def _abstract_params():
+    return jax.eval_shape(
+        lambda: scorer_init(jax.random.PRNGKey(0), SCORER_CFG))
+
+
+def _rules():
+    # R axis over "model": w1 [R,d,H], w2 [R,H,B]
+    return ShardRules([
+        (r"w1", P("model", None, None)),
+        (r"b1", P("model", None)),
+        (r"w2", P("model", None, None)),
+        (r"b2", P("model", None)),
+    ])
+
+
+def _train_cell() -> CellDef:
+    # 32k queries/step: the BCE targets are [R, batch, B] (~84 GB fp32 global
+    # at 32k) — streamed minibatches exactly as the paper trains (10M total).
+    BATCH = 1 << 15
+
+    def inputs(mesh):
+        return {"x": sds((BATCH, D)),
+                "label_ids": sds((BATCH, K_NEIGH), jnp.int32),
+                "label_mask": sds((BATCH, K_NEIGH)),
+                "assign": sds((R, N_CORPUS), jnp.int32)}
+
+    def in_specs(mesh):
+        ax = dp(mesh)
+        return {"x": P(ax, None), "label_ids": P(ax, None),
+                "label_mask": P(ax, None),
+                "assign": P("model", ("data",))}
+
+    return CellDef(
+        kind="train", inputs=inputs, in_specs=in_specs,
+        step=lambda: S.build_irli_train_step(SCORER_CFG, B_BUCKETS)[0])
+
+
+def _mesh_size(mesh) -> int:
+    out = 1
+    for s in mesh.devices.shape:
+        out *= s
+    return out
+
+
+def _serve_cell() -> CellDef:
+    QBATCH = 4096
+
+    def params_for(mesh):
+        n_shards = _mesh_size(mesh)
+        l_loc = N_CORPUS // n_shards
+        max_load = 2 * max(1, l_loc // B_BUCKETS)
+        return {
+            "scorer": _abstract_params(),
+            "members": sds((n_shards, R, B_BUCKETS, max_load), jnp.int32),
+            "base": sds((n_shards, l_loc, D)),
+        }
+
+    def param_specs(mesh, params_sds):
+        axes = tuple(mesh.axis_names)
+        return {
+            "scorer": jax.tree.map(lambda _: P(), params_sds["scorer"]),
+            "members": P(axes, None, None, None),
+            "base": P(axes, None, None),
+        }
+
+    return CellDef(
+        kind="serve",
+        inputs=lambda mesh: {"queries": sds((QBATCH, D))},
+        in_specs=lambda mesh: {"queries": P()},
+        params=params_for, param_specs=param_specs,
+        step=lambda mesh: S.build_irli_serve(mesh, m=5, tau=2, k=10),
+        step_with_mesh=True,
+        note="every chip = one paper node; sorted-frequency candidate path; "
+             "single [Q,P*k] all_gather merge")
+
+
+def get_arch() -> ArchDef:
+    return ArchDef(
+        name="irli-deep1b", family="irli",
+        abstract_params=_abstract_params, rules=_rules,
+        cells={"train_scorers": _train_cell(), "serve_query": _serve_cell()},
+        opt="adamw_nomaster",
+        notes="the paper's own 100M-point distributed config (§5.3)")

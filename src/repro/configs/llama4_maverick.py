@@ -1,0 +1,35 @@
+"""llama4-maverick-400b-a17b [hf:meta-llama/Llama-4 family; unverified]:
+48L d=5120 40H GQA(kv=8) head_dim=128, MoE 128 experts top-1 + 1 shared
+expert (d_ff=8192 per expert), interleaved attention: 3 chunked-local layers
+(chunk 8192) + 1 global NoPE layer per period of 4 (iRoPE).
+
+Text backbone only (early-fusion frontend is a stub per spec). long_500k
+RUNS: chunked layers are sub-quadratic; the periodic global layers' KV is
+sequence-sharded over the grid (DESIGN §4/§5).
+
+Scale notes: 400B total / ~17B active. Params FSDP-sharded over "data" in
+addition to expert-parallel "model" sharding; Adafactor optimizer (full Adam
+fp32 state = 4.8TB would blow the 16GB/chip HBM budget; factored state fits).
+"""
+from repro.configs.lm_common import make_lm_arch
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="llama4-maverick-400b-a17b", n_layers=48, d_model=5120, n_heads=40,
+    n_kv_heads=8, head_dim=128, d_ff=8192, vocab=202048, act="silu",
+    tie_embeddings=False, rope_theta=500_000.0,
+    attn_pattern=("chunked", "chunked", "chunked", "full"), chunk=8192,
+    nope_on_full=True,
+    moe=MoEConfig(d_model=5120, d_ff=8192, n_experts=128, top_k=1,
+                  capacity_factor=1.25, router="topk", n_shared_experts=1),
+    param_dtype="bfloat16")
+
+
+def get_arch():
+    return make_lm_arch(
+        CONFIG, opt="adafactor", opt_kw={},
+        fsdp=True,
+        long_ctx_ok=True,
+        notes=("128-expert EP over model axis (8/device) + FSDP over data; "
+               "iRoPE chunked-local attention; shared expert always-on"))

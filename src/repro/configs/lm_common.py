@@ -1,0 +1,163 @@
+"""Shared machinery for the 5 LM-family architectures.
+
+Shapes (assigned):
+  train_4k     seq 4096  global_batch 256   (train_step)
+  prefill_32k  seq 32768 global_batch 32    (serve: prompt forward)
+  decode_32k   ctx 32768 global_batch 128   (serve: 1 token + KV cache)
+  long_500k    ctx 524288 global_batch 1    (serve: decode, sub-quadratic only)
+
+Sharding (DESIGN §5): batch over ("pod","data"); heads / ff / vocab over
+"model"; MoE experts over "model" when E >= mesh model size, else tensor-
+parallel over ff; llama4-scale params additionally FSDP-sharded over "data".
+KV caches: kv-head dim over "model" when divisible, else sequence dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, CellDef, dp, sds
+from repro.models.module import ShardRules
+from repro.models.transformer import LMConfig, lm_init, cache_specs
+from repro.launch import steps as S
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="serve"),
+    "decode_32k": dict(seq=32768, batch=128, kind="serve"),
+    "long_500k": dict(seq=524288, batch=1, kind="serve"),
+}
+
+
+def lm_rules(cfg: LMConfig, fsdp: bool = False) -> ShardRules:
+    """Path-regex -> PartitionSpec for the stacked LM param tree."""
+    if cfg.moe is not None and cfg.moe.n_experts >= 16:
+        # 2-D expert x tensor parallelism: experts over "model", d_ff over
+        # "data". Contractions stay weight-local (the einsum contracts the
+        # full d dim); only activation-sized partial sums cross the data
+        # axis. FSDP-over-data was measured WORSE here: XLA hoists the
+        # per-layer weight all-gathers out of the scan, materializing the
+        # full unsharded expert stack (48 GiB temp on llama4 — §Perf log).
+        expert_specs = [
+            (r"moe/experts/(gate|up)", P(None, "model", None, "data")),
+            (r"moe/experts/down", P(None, "model", "data", None)),
+        ]
+    else:
+        expert_specs = [  # tensor parallel over ff inside each expert
+            (r"moe/experts/(gate|up)", P(None, None, None, "model")),
+            (r"moe/experts/down", P(None, None, "model", None)),
+        ]
+    rules = [
+        (r"embed/table", P("model", None)),
+        (r"lm_head/kernel", P(None, "model")),
+        (r"attn/(q|k|v)_proj/kernel", P(None, None, "model")),
+        (r"attn/o_proj/kernel", P(None, "model", None)),
+        (r"(mlp|moe/shared)/(gate|up)/kernel", P(None, None, "model")),
+        (r"(mlp|moe/shared)/down/kernel", P(None, "model", None)),
+        (r"moe/router/kernel", P(None, None, None)),
+        *expert_specs,
+        (r"(scale|bias)$", P()),
+    ]
+    return ShardRules(rules, strict=False)
+
+
+def _cache_sharding(cfg: LMConfig, mesh, model_size: int = 16):
+    """Per-layer cache PartitionSpec: kv-heads over model if divisible, else
+    sequence dim over model."""
+    specs = []
+    for layer in range(cfg.n_layers):
+        if cfg.n_kv_heads % model_size == 0:
+            spec = P(dp(mesh), None, "model", None)
+        else:
+            spec = P(dp(mesh), "model", None, None)
+        specs.append({"k": spec, "v": spec})
+    return specs
+
+
+def _long_cache_sharding(cfg: LMConfig, mesh):
+    """batch=1: shard the sequence dim over the whole (data, model) grid."""
+    spec = P(None, ("data", "model"), None, None)
+    return [{"k": spec, "v": spec} for _ in range(cfg.n_layers)]
+
+
+def make_lm_arch(cfg: LMConfig, *, opt: str, opt_kw=None, fsdp: bool = False,
+                 long_ctx_ok: bool = False, long_skip_reason: str = "",
+                 micro_split: str = "strided", notes: str = "") -> ArchDef:
+    opt_kw = opt_kw or {}
+
+    def abstract_params():
+        return jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+
+    def rules():
+        return lm_rules(cfg, fsdp)
+
+    cells: dict[str, CellDef] = {}
+
+    # ---- train_4k --------------------------------------------------------
+    sh = SHAPES["train_4k"]
+
+    def train_inputs(mesh):
+        return {"tokens": sds((sh["batch"], sh["seq"]), jnp.int32),
+                "labels": sds((sh["batch"], sh["seq"]), jnp.int32)}
+
+    def train_specs(mesh):
+        return {"tokens": P(dp(mesh), None), "labels": P(dp(mesh), None)}
+
+    cells["train_4k"] = CellDef(
+        kind="train", inputs=train_inputs, in_specs=train_specs,
+        step=lambda mesh: S.build_lm_train_step(cfg, opt, mesh=mesh,
+                                                micro_split=micro_split,
+                                                **opt_kw)[0],
+        step_with_mesh=True)
+
+    # ---- prefill_32k -----------------------------------------------------
+    shp = SHAPES["prefill_32k"]
+
+    def prefill_inputs(mesh):
+        return {"tokens": sds((shp["batch"], shp["seq"]), jnp.int32)}
+
+    cells["prefill_32k"] = CellDef(
+        kind="serve",
+        inputs=prefill_inputs,
+        in_specs=lambda mesh: {"tokens": P(dp(mesh), None)},
+        step=lambda: S.build_lm_prefill(cfg))
+
+    # ---- decode_32k ------------------------------------------------------
+    shd = SHAPES["decode_32k"]
+
+    def decode_inputs(mesh):
+        return {"token": sds((shd["batch"],), jnp.int32),
+                "pos": sds((shd["batch"],), jnp.int32),
+                "caches": cache_specs(cfg, shd["batch"], shd["seq"])}
+
+    def decode_specs(mesh):
+        return {"token": P(dp(mesh)), "pos": P(dp(mesh)),
+                "caches": _cache_sharding(cfg, mesh)}
+
+    cells["decode_32k"] = CellDef(
+        kind="serve", inputs=decode_inputs, in_specs=decode_specs,
+        step=lambda: S.build_lm_decode(cfg, shd["seq"]))
+
+    # ---- long_500k -------------------------------------------------------
+    shl = SHAPES["long_500k"]
+    if long_ctx_ok:
+        def long_inputs(mesh):
+            return {"token": sds((shl["batch"],), jnp.int32),
+                    "pos": sds((shl["batch"],), jnp.int32),
+                    "caches": cache_specs(cfg, shl["batch"], shl["seq"])}
+
+        def long_specs(mesh):
+            return {"token": P(), "pos": P(),
+                    "caches": _long_cache_sharding(cfg, mesh)}
+
+        cells["long_500k"] = CellDef(
+            kind="serve", inputs=long_inputs, in_specs=long_specs,
+            step=lambda: S.build_lm_decode(cfg, shl["seq"]))
+    else:
+        cells["long_500k"] = CellDef(kind="serve", skip=long_skip_reason)
+
+    return ArchDef(
+        name=cfg.name, family="lm", abstract_params=abstract_params,
+        rules=rules, cells=cells, opt=opt, opt_kw=opt_kw,
+        model_flops_per_token=6 * cfg.n_active_params, notes=notes)

@@ -1,0 +1,72 @@
+"""Shared cell machinery for the 4 recsys architectures.
+
+Shapes (assigned):
+  train_batch    batch 65,536   (train_step)
+  serve_p99      batch 512      (online inference)
+  serve_bulk     batch 262,144  (offline scoring)
+  retrieval_cand batch 1 x 1,048,576 candidates (padded from 1M to /512)
+
+``retrieval_cand`` scores one query embedding against the item-embedding
+table with a batched dot + top-k — the brute-force path that the IRLI index
+replaces (core/index.py); the IRLI-accelerated variant is the paper's own
+dry-run cell (configs/irli_deep1b.py) and the §Perf comparison.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import CellDef, dp, grid_axes, sds
+from repro.launch import steps as S
+
+BATCHES = {"train_batch": 65536, "serve_p99": 512, "serve_bulk": 262144}
+N_CANDIDATES = 1_048_576   # 1M padded to a power of two (shardable /512)
+
+
+def ctr_cells(input_builder: Callable, spec_builder: Callable,
+              apply_fn: Callable, opt: str = "adamw_nomaster") -> dict:
+    """Build train_batch / serve_p99 / serve_bulk cells from per-arch input
+    builders. input_builder(batch) -> {name: SDS};
+    spec_builder(mesh, batch) -> {name: P}."""
+    cells = {}
+    for name, batch in BATCHES.items():
+        kind = "train" if name == "train_batch" else "serve"
+        inputs = (lambda b: lambda mesh: input_builder(b))(batch)
+        specs = (lambda b: lambda mesh: spec_builder(mesh, b))(batch)
+        if kind == "train":
+            cells[name] = CellDef(
+                kind="train", inputs=inputs, in_specs=specs,
+                step=(lambda a=apply_fn, o=opt:
+                      S.build_ctr_train_step(a, o)[0]))
+        else:
+            cells[name] = CellDef(
+                kind="serve", inputs=inputs, in_specs=specs,
+                step=(lambda a=apply_fn: S.build_ctr_serve(a)))
+    return cells
+
+
+def retrieval_cell(embed_dim: int, k: int = 100) -> CellDef:
+    """batch=1 query vs 1M-candidate item table (two-tower dot scoring)."""
+
+    def params(mesh):
+        return {"item_table": {"table": sds((N_CANDIDATES, embed_dim))}}
+
+    def inputs(mesh):
+        return {"query": sds((1, embed_dim))}
+
+    def in_specs(mesh):
+        return {"query": P()}
+
+    return CellDef(
+        kind="serve", inputs=inputs, in_specs=in_specs, params=params,
+        step=lambda: S.build_retrieval_serve(k),
+        note="item table rows sharded over full grid; brute-force baseline "
+             "for the IRLI learned index (paper §5.3)")
+
+
+def retrieval_table_rule():
+    """Sharding rule entry for the retrieval item table."""
+    return (r"item_table/table", None)  # placeholder; specs built per-mesh

@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    # LM family
+    "gemma-7b": "repro.configs.gemma_7b",
+    "yi-6b": "repro.configs.yi_6b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    # GNN
+    "schnet": "repro.configs.schnet",
+    # RecSys
+    "dien": "repro.configs.dien",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+    "bst": "repro.configs.bst",
+    "xdeepfm": "repro.configs.xdeepfm",
+    # the paper's own production config (bonus cells)
+    "irli-deep1b": "repro.configs.irli_deep1b",
+}
+
+_CACHE: dict = {}
+
+
+def get_arch(name: str):
+    if name not in _CACHE:
+        if name not in ARCHS:
+            raise KeyError(f"unknown arch {name!r}; choices: {sorted(ARCHS)}")
+        _CACHE[name] = importlib.import_module(ARCHS[name]).get_arch()
+    return _CACHE[name]
+
+
+def all_cells(include_irli: bool = True):
+    """[(arch, shape)] for every defined cell (incl. skip-marked)."""
+    out = []
+    for name in ARCHS:
+        if not include_irli and name == "irli-deep1b":
+            continue
+        arch = get_arch(name)
+        for shape in arch.cells:
+            out.append((name, shape))
+    return out

@@ -1,0 +1,119 @@
+"""schnet [arXiv:1706.08566]: n_interactions=3 d_hidden=64 rbf=300 cutoff=10.
+
+Cells (per assignment):
+  full_graph_sm   cora-like: 2,708 nodes / 10,556 edges / d_feat 1,433
+  minibatch_lg    reddit-like: 233k nodes, fanout (15,10) sampler, 1,024 seeds
+  ogb_products    2,449,029 nodes / 61,859,140 edges / d_feat 100 (full batch)
+  molecule        128 graphs x 30 nodes / 64 edges (energy regression)
+
+Adaptation (DESIGN §4): SchNet's cfconv needs interatomic distances; for the
+non-geometric graph cells the pipeline synthesizes 3-D positions so the RBF
+path runs at full fidelity. Node-classification heads for the citation/product
+graphs; energy readout for molecules. IRLI inapplicable (no retrieval space).
+
+Shapes are padded to multiples of 512 so every tensor is shardable on both
+production meshes; masks carry validity (padding noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchDef, CellDef, grid_axes, sds
+from repro.launch import steps as S
+from repro.models.gnn import SchNetConfig, schnet_init
+from repro.models.module import ShardRules
+
+BASE = SchNetConfig(name="schnet", n_interactions=3, d_hidden=64, n_rbf=300,
+                    cutoff=10.0)
+
+# per-cell model variants
+CFG_SM = dataclasses.replace(BASE, d_in=1433, n_out=16, readout="none")
+CFG_LG = dataclasses.replace(BASE, d_in=602, n_out=41, readout="none")
+CFG_PROD = dataclasses.replace(BASE, d_in=100, n_out=47, readout="none")
+CFG_MOL = dataclasses.replace(BASE, d_in=0, n_types=100, n_out=1, readout="sum")
+
+# padded cell shapes (original -> padded to /512)
+CELL_SHAPES = {
+    "full_graph_sm": dict(nodes=2708, edges=10556, pad_nodes=3072,
+                          pad_edges=10752, cfg=CFG_SM),
+    "minibatch_lg": dict(nodes=169984, edges=168960, pad_nodes=169984,
+                         pad_edges=168960, cfg=CFG_LG),
+    "ogb_products": dict(nodes=2449029, edges=61859140, pad_nodes=2449408,
+                         pad_edges=61865984, cfg=CFG_PROD),
+    "molecule": dict(nodes=3840, edges=8192, pad_nodes=4096,
+                     pad_edges=8192, cfg=CFG_MOL, n_graphs=128),
+}
+
+
+def _rules() -> ShardRules:
+    # SchNet params are tiny (~100k): replicate everything.
+    return ShardRules([(r".*", P())])
+
+
+def _node_cell(name: str) -> CellDef:
+    sh = CELL_SHAPES[name]
+    cfg = sh["cfg"]
+    N, E = sh["pad_nodes"], sh["pad_edges"]
+    replicate = N < 100_000  # small graphs: replication beats scatter traffic
+
+    def inputs(mesh):
+        return {"feats": sds((N, cfg.d_in)), "src": sds((E,), jnp.int32),
+                "dst": sds((E,), jnp.int32), "dist": sds((E,)),
+                "labels": sds((N,), jnp.int32), "node_mask": sds((N,))}
+
+    def in_specs(mesh):
+        if replicate:
+            return {k: P() for k in
+                    ("feats", "src", "dst", "dist", "labels", "node_mask")}
+        g = grid_axes(mesh)
+        return {"feats": P(g, None), "src": P(g), "dst": P(g), "dist": P(g),
+                "labels": P(g), "node_mask": P(g)}
+
+    return CellDef(
+        kind="train", inputs=inputs, in_specs=in_specs,
+        params=lambda mesh: jax.eval_shape(
+            lambda: schnet_init(jax.random.PRNGKey(0), cfg)),
+        step=lambda: S.build_gnn_node_train(cfg, cfg.n_out)[0])
+
+
+def _molecule_cell() -> CellDef:
+    sh = CELL_SHAPES["molecule"]
+    cfg = sh["cfg"]
+    N, E, G = sh["pad_nodes"], sh["pad_edges"], sh["n_graphs"]
+
+    def inputs(mesh):
+        return {"types": sds((N,), jnp.int32), "src": sds((E,), jnp.int32),
+                "dst": sds((E,), jnp.int32), "dist": sds((E,)),
+                "graph_ids": sds((N,), jnp.int32), "energy": sds((G,))}
+
+    def in_specs(mesh):
+        g = grid_axes(mesh)
+        return {"types": P(g), "src": P(g), "dst": P(g), "dist": P(g),
+                "graph_ids": P(g), "energy": P()}
+
+    return CellDef(
+        kind="train", inputs=inputs, in_specs=in_specs,
+        params=lambda mesh: jax.eval_shape(
+            lambda: schnet_init(jax.random.PRNGKey(0), cfg)),
+        step=lambda: S.build_gnn_energy_train(cfg, G)[0])
+
+
+def get_arch() -> ArchDef:
+    cells = {
+        "full_graph_sm": _node_cell("full_graph_sm"),
+        "minibatch_lg": _node_cell("minibatch_lg"),
+        "ogb_products": _node_cell("ogb_products"),
+        "molecule": _molecule_cell(),
+    }
+    return ArchDef(
+        name="schnet", family="gnn",
+        abstract_params=lambda: jax.eval_shape(
+            lambda: schnet_init(jax.random.PRNGKey(0), CFG_SM)),
+        rules=_rules, cells=cells, opt="adamw_nomaster",
+        notes=("segment_sum message passing; params replicated (tiny), "
+               "edges/nodes sharded over the full grid for large cells; "
+               "IRLI inapplicable — no large discrete retrieval space"))

@@ -1,0 +1,6 @@
+"""IRLI core: the paper's contribution as composable JAX modules."""
+from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.partition import (hash_init, build_inverted_index, loads,
+                                  load_std, bucket_targets, InvertedIndex)
+from repro.core.network import ScorerConfig, scorer_init, scorer_logits, scorer_probs, scorer_loss
+from repro.core import repartition, query, baselines, distributed, vocab_head

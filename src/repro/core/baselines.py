@@ -1,0 +1,120 @@
+"""Partitioning baselines the paper compares against (Fig. 3):
+k-means, balanced k-means, cross-polytope-ish LSH (signed random projection),
+and random (2-universal hash). Each produces an assignment [L] -> bucket plus
+a query->bucket scoring rule, evaluated through the SAME candidate/recall
+harness as IRLI (benchmarks/bench_recall_candidates.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def kmeans_partition(base: np.ndarray, B: int, iters: int = 25, seed: int = 0):
+    """Lloyd's k-means. Returns (assign [L], centers [B, d])."""
+    rng = np.random.default_rng(seed)
+    centers = base[rng.choice(base.shape[0], B, replace=False)].copy()
+    for _ in range(iters):
+        d2 = ((base[:, None, :] - centers[None]) ** 2).sum(-1) \
+            if base.shape[0] * B * base.shape[1] < 2e8 else None
+        if d2 is None:  # blocked
+            assign = np.empty(base.shape[0], np.int32)
+            for s in range(0, base.shape[0], 4096):
+                blk = base[s:s + 4096]
+                dd = (blk ** 2).sum(1)[:, None] - 2 * blk @ centers.T \
+                    + (centers ** 2).sum(1)[None]
+                assign[s:s + 4096] = dd.argmin(1)
+        else:
+            assign = d2.argmin(1).astype(np.int32)
+        for b in range(B):
+            sel = base[assign == b]
+            if len(sel):
+                centers[b] = sel.mean(0)
+    return assign, centers
+
+
+def balanced_kmeans_partition(base: np.ndarray, B: int, iters: int = 25,
+                              seed: int = 0):
+    """Capacity-bounded k-means (greedy assignment by distance rank)."""
+    rng = np.random.default_rng(seed)
+    L = base.shape[0]
+    cap = int(np.ceil(L / B))
+    centers = base[rng.choice(L, B, replace=False)].copy()
+    assign = np.zeros(L, np.int32)
+    for _ in range(iters):
+        d2 = (base ** 2).sum(1)[:, None] - 2 * base @ centers.T \
+            + (centers ** 2).sum(1)[None]
+        order = np.argsort(d2.min(1))          # confident points first
+        load = np.zeros(B, np.int64)
+        for i in order:
+            for b in np.argsort(d2[i]):
+                if load[b] < cap:
+                    assign[i] = b
+                    load[b] += 1
+                    break
+        for b in range(B):
+            sel = base[assign == b]
+            if len(sel):
+                centers[b] = sel.mean(0)
+    return assign, centers
+
+
+def lsh_partition(base: np.ndarray, B: int, seed: int = 0):
+    """Signed-random-projection LSH: bucket = sign bits of ⌈log2 B⌉ projections."""
+    rng = np.random.default_rng(seed)
+    nbits = int(np.ceil(np.log2(B)))
+    planes = rng.normal(size=(base.shape[1], nbits)).astype(np.float32)
+    bits = (base @ planes > 0).astype(np.int64)
+    code = (bits * (2 ** np.arange(nbits))[None]).sum(1) % B
+    return code.astype(np.int32), planes
+
+
+def random_partition(L: int, B: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, B, L).astype(np.int32)
+
+
+# ------------------------------------------------------- query -> buckets ---
+def centroid_top_buckets(queries: np.ndarray, centers: np.ndarray, m: int,
+                         metric: str = "angular"):
+    if metric == "angular":
+        score = queries @ centers.T
+    else:
+        score = -((queries ** 2).sum(1)[:, None] - 2 * queries @ centers.T
+                  + (centers ** 2).sum(1)[None])
+    return np.argsort(-score, axis=1)[:, :m]
+
+
+def lsh_top_buckets(queries: np.ndarray, planes: np.ndarray, B: int, m: int):
+    """Multi-probe LSH: flip the m-1 lowest-margin bits."""
+    proj = queries @ planes
+    nbits = planes.shape[1]
+    base_bits = (proj > 0).astype(np.int64)
+    pow2 = (2 ** np.arange(nbits))[None]
+    out = np.empty((queries.shape[0], m), np.int64)
+    out[:, 0] = (base_bits * pow2).sum(1) % B
+    margins = np.argsort(np.abs(proj), axis=1)
+    for j in range(1, m):
+        flip = base_bits.copy()
+        idx = margins[:, (j - 1) % nbits]
+        flip[np.arange(len(queries)), idx] ^= 1
+        out[:, j] = (flip * pow2).sum(1) % B
+    return out.astype(np.int32)
+
+
+def candidates_from_partition(assign: np.ndarray, bucket_idx: np.ndarray,
+                              L: int) -> np.ndarray:
+    """Boolean [Q, L] candidate mask for baseline partitions."""
+    Q, m = bucket_idx.shape
+    mask = np.zeros((Q, L), bool)
+    buckets_of = assign  # [L]
+    for b in range(bucket_idx.max() + 1):
+        members = np.where(buckets_of == b)[0]
+        rows = np.where((bucket_idx == b).any(1))[0]
+        if len(rows) and len(members):
+            mask[np.ix_(rows, members)] = True
+    return mask
+
+
+def recall_of_mask(mask: np.ndarray, gt: np.ndarray) -> float:
+    hits = np.take_along_axis(mask, gt, axis=1)
+    return float(hits.mean())

@@ -1,0 +1,175 @@
+"""Distributed IRLI (paper §5.3): corpus sharded over P nodes, R_local models
+per node — expressed as a JAX mesh program instead of P processes.
+
+Mapping (DESIGN §5):
+  paper "node" p ∈ [P]      -> mesh axis "data" (and "pod" outer axis)
+  per-node R_local reps     -> local leading axis of the stacked scorer params
+                               (optionally sharded over "model")
+  per-node inverted index   -> member matrix sharded over "data" (each shard
+                               holds only its 1/P of the corpus)
+  candidate union           -> per-shard local top-k true-distance rerank,
+                               then all_gather of the tiny [k] winners + final
+                               top-k merge (exactly the paper's CPU merge).
+
+``distributed_search`` is written with shard_map so the collective schedule
+is explicit (one all_gather of k·d floats per query — nothing else crosses
+shards). The same function lowers on the 512-device production mesh in
+launch/dryrun.py (arch id: the paper's own "irli-deep1b" config).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.network import scorer_probs
+from repro.core.query import candidate_frequencies_dense
+
+
+def local_search(params, members, base_shard, queries, *, m: int, tau: int,
+                 k: int, loss_kind: str = "softmax_bce",
+                 metric: str = "angular"):
+    """Single-shard IRLI search: queries [Q,d] vs this shard's corpus.
+
+    members: [R, B, ML] local inverted index (ids into base_shard)
+    base_shard: [L_loc, d]
+    Returns (ids [Q,k] local ids, scores [Q,k]).
+    """
+    L_loc = base_shard.shape[0]
+    probs = scorer_probs(params, queries, loss_kind)        # [R, Q, B]
+    _, bidx = jax.lax.top_k(probs, m)                        # [R, Q, m]
+    cands = jax.vmap(lambda mem_r, idx_r: mem_r[idx_r])(members, bidx)
+    cands = jnp.moveaxis(cands, 0, 1).reshape(queries.shape[0], -1)
+    freq = candidate_frequencies_dense(cands, L_loc)         # [Q, L_loc]
+    mask = freq >= tau
+    if metric == "angular":
+        sim = jnp.einsum("qd,ld->ql", queries, base_shard,
+                         preferred_element_type=jnp.float32)
+    else:
+        sim = -(jnp.sum(queries ** 2, 1, keepdims=True)
+                - 2 * queries @ base_shard.T
+                + jnp.sum(base_shard ** 2, 1)[None, :])
+    sim = jnp.where(mask, sim, -jnp.inf)
+    scores, ids = jax.lax.top_k(sim, k)
+    return ids, scores
+
+
+def make_distributed_search(mesh: Mesh, *, m: int, tau: int, k: int,
+                            corpus_axes=("data",), loss_kind="softmax_bce",
+                            metric="angular"):
+    """Build the sharded search fn. Per-shard params (scorers differ per
+    corpus shard, as in the paper: 8 nodes × R=4 distinct models)."""
+    ax = corpus_axes if len(corpus_axes) > 1 else corpus_axes[0]
+
+    def sharded(params, members, base, queries):
+        # shard-local search
+        ids, scores = local_search(params, members, base, queries, m=m,
+                                   tau=tau, k=k, loss_kind=loss_kind,
+                                   metric=metric)
+        # globalize ids: offset by shard start
+        axis_index = jax.lax.axis_index(corpus_axes)
+        L_loc = base.shape[0]
+        gids = ids + axis_index * L_loc
+        # merge: all_gather the tiny [Q, k] winners, global top-k
+        all_scores = jax.lax.all_gather(scores, corpus_axes, axis=1)  # [Q,P,k]
+        all_ids = jax.lax.all_gather(gids, corpus_axes, axis=1)
+        Qn = scores.shape[0]
+        flat_s = all_scores.reshape(Qn, -1)
+        flat_i = all_ids.reshape(Qn, -1)
+        best, pos = jax.lax.top_k(flat_s, k)
+        return jnp.take_along_axis(flat_i, pos, axis=1), best
+
+    pspec_params = P(None)         # replicated scorer stack is the safe default;
+    # per-shard distinct params: leading axis = shard -> P(corpus_axes)
+    return jax.shard_map(
+        sharded, mesh=mesh,
+        in_specs=(P(*(corpus_axes + (None,))),   # params leading shard axis
+                  P(*(corpus_axes + (None, None, None))),   # members [P,R,B,ML]
+                  P(*(corpus_axes + (None, None))),         # base [P,Lloc,d]
+                  P()),                                      # queries replicated
+        out_specs=(P(), P()),
+        check_vma=False)
+
+
+def shard_corpus(base, n_shards: int):
+    """Host-side: split [L, d] corpus into [n_shards, L/n_shards, d]."""
+    L = base.shape[0]
+    per = L // n_shards
+    return base[: per * n_shards].reshape(n_shards, per, -1)
+
+
+# -------------------------------------------------- production-scale path ---
+def shard_search_local(scorer_params, members, base_shard, queries, *,
+                       m: int, tau: int, k: int, topC: int = 1024,
+                       q_chunk: int = 512, loss_kind: str = "softmax_bce",
+                       metric: str = "angular"):
+    """100M-scale per-shard search using the sorted-frequency path.
+
+    Every chip is one of the paper's "nodes": it owns base_shard [L_loc, d]
+    and a full R-rep inverted index over those L_loc vectors. No [Q, L]
+    table is ever built — candidates stay compact:
+      scorer top-m -> member gather [Q, R*m*ML] -> sort+run-length count
+      -> top-C frequent -> gather vectors -> true-distance top-k.
+    Queries processed in chunks of q_chunk to bound the [Qc, C, d] gather.
+    """
+    from repro.core.network import scorer_logits
+    from repro.core.query import sorted_frequency_topC, rerank_gathered
+
+    Q = queries.shape[0]
+
+    def chunk(qs):
+        # top-m bucket SELECTION only needs logit order — softmax is
+        # row-monotonic, so skip it: saves a full [R, Qc, B] exp+normalize
+        # round-trip through HBM (§Perf irli-serve iteration 1; the Pallas
+        # irli_topk kernel is the TPU path that never materializes logits)
+        logits = scorer_logits(scorer_params, qs)             # [R, Qc, B]
+        _, bidx = jax.lax.top_k(logits, m)
+        cands = jax.vmap(lambda mem, idx: mem[idx])(members, bidx)
+        cands = jnp.moveaxis(cands, 0, 1).reshape(qs.shape[0], -1)
+        ids, counts = sorted_frequency_topC(cands, topC)
+        return rerank_gathered(qs, base_shard, ids, counts, tau, k, metric)
+
+    if Q <= q_chunk or Q % q_chunk != 0:
+        return chunk(queries)
+    qs = queries.reshape(Q // q_chunk, q_chunk, -1)
+    ids, scores = jax.lax.map(chunk, qs)
+    return ids.reshape(Q, k), scores.reshape(Q, k)
+
+
+def make_production_search(mesh: Mesh, *, m: int, tau: int, k: int,
+                           topC: int = 1024, loss_kind="softmax_bce",
+                           metric="angular"):
+    """shard_map search over EVERY chip as a corpus shard (paper §5.3 with
+    P = n_devices "nodes"). Inputs (global shapes):
+
+      scorer_params: replicated stacked R-rep scorer
+      members: [P, R, B, ML] per-shard inverted indexes (P = mesh size)
+      base:    [P, L_loc, d] per-shard corpora
+      queries: [Q, d] replicated
+    Returns (ids [Q, k] GLOBAL ids, scores [Q, k]) — merged across shards.
+    """
+    axes = tuple(mesh.axis_names)
+
+    def local(scorer_params, members, base, queries):
+        members = members[0]          # strip the shard-leading dim
+        base = base[0]
+        ids, scores = shard_search_local(
+            scorer_params, members, base, queries, m=m, tau=tau, k=k,
+            topC=topC, loss_kind=loss_kind, metric=metric)
+        # globalize ids and merge
+        shard = jax.lax.axis_index(axes)
+        L_loc = base.shape[0]
+        gids = jnp.where(ids >= 0, ids + shard * L_loc, -1)
+        all_scores = jax.lax.all_gather(scores, axes, axis=1)   # [Q, P, k]
+        all_ids = jax.lax.all_gather(gids, axes, axis=1)
+        Qn = scores.shape[0]
+        best, pos = jax.lax.top_k(all_scores.reshape(Qn, -1), k)
+        return jnp.take_along_axis(all_ids.reshape(Qn, -1), pos, axis=1), best
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(axes, None, None, None), P(axes, None, None), P()),
+        out_specs=(P(), P()),
+        check_vma=False)

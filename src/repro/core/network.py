@@ -1,0 +1,76 @@
+"""The R stacked scorer networks f_r : R^d -> R^B.
+
+Paper: per repetition, a feed-forward net (input d, hidden 1024, output B),
+trained with BCE on softmax scores. TPU adaptation: all R nets live in ONE
+stacked param tree with leading axis R and run as a single einsum pair —
+`(R·H)×d` and `(R·B)×H` GEMMs that saturate the MXU, instead of R small
+kernels (DESIGN §3). The R axis is mesh-shardable ("model").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScorerConfig:
+    d_in: int
+    d_hidden: int
+    n_buckets: int       # B
+    n_reps: int          # R
+    loss: str = "softmax_bce"   # paper-faithful | "sigmoid_bce"
+    param_dtype: str = "float32"
+
+
+def scorer_init(key, cfg: ScorerConfig):
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    R, d, H, B = cfg.n_reps, cfg.d_in, cfg.d_hidden, cfg.n_buckets
+    s1, s2 = 1.0 / d ** 0.5, 1.0 / H ** 0.5
+    return {
+        "w1": (jax.random.normal(k1, (R, d, H), jnp.float32) * s1).astype(dt),
+        "b1": jnp.zeros((R, H), dt),
+        "w2": (jax.random.normal(k2, (R, H, B), jnp.float32) * s2).astype(dt),
+        "b2": jnp.zeros((R, B), dt),
+    }
+
+
+def scorer_logits(params, x):
+    """x: [N, d] -> logits [R, N, B]. One fused GEMM pair over all reps."""
+    h = jnp.einsum("nd,rdh->rnh", x, params["w1"],
+                   preferred_element_type=jnp.float32)
+    h = jax.nn.relu(h + params["b1"][:, None, :].astype(jnp.float32))
+    h = h.astype(x.dtype)
+    out = jnp.einsum("rnh,rhb->rnb", h, params["w2"],
+                     preferred_element_type=jnp.float32)
+    return out + params["b2"][:, None, :].astype(jnp.float32)   # fp32
+
+
+def scorer_probs(params, x, loss_kind: str = "softmax_bce"):
+    """Bucket probability scores (softmax per paper, sigmoid variant)."""
+    logits = scorer_logits(params, x)
+    if loss_kind == "softmax_bce":
+        return jax.nn.softmax(logits, axis=-1)
+    return jax.nn.sigmoid(logits)
+
+
+def scorer_loss(params, cfg: ScorerConfig, x, targets):
+    """BCE against multi-hot bucket targets. targets: [R, N, B].
+
+    softmax_bce is the paper's formulation (BCE applied to softmax scores);
+    sigmoid_bce is the standard numerically-clean multi-label variant. Both
+    are exposed; EXPERIMENTS.md compares them.
+    """
+    logits = scorer_logits(params, x)  # [R, N, B] fp32
+    if cfg.loss == "softmax_bce":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        p = jnp.exp(logp)
+        # -[y log p + (1-y) log(1-p)], stable via log1p(-p) clamp
+        log1mp = jnp.log1p(-jnp.clip(p, 0.0, 1.0 - 1e-6))
+        per = -(targets * logp + (1.0 - targets) * log1mp)
+    else:
+        per = jnp.maximum(logits, 0) - logits * targets + jnp.log1p(
+            jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(jnp.sum(per, axis=-1))

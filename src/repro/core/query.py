@@ -1,0 +1,151 @@
+"""IRLI query path (Alg. 2): score -> top-m buckets per rep -> gather
+inverted-index members -> per-candidate frequency across the m·R probed
+buckets -> threshold filter -> (optional) true-distance re-rank.
+
+Dense-count path (L ≤ ~1e6 per shard): frequency via one-hot segment_sum into
+a [Q, L] count table — TPU-friendly (no sort), memory Q·L.
+Sorted path: per-query sort of the gathered candidate ids + run-length count —
+for very large L; used by the distributed 100M-point configuration where the
+per-node L is sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.network import scorer_probs
+from repro.core.partition import InvertedIndex
+
+
+def top_buckets(params, queries, m: int, loss_kind: str = "softmax_bce"):
+    """queries [Q, d] -> (scores [R, Q, m], idx [R, Q, m])."""
+    probs = scorer_probs(params, queries, loss_kind)
+    return jax.lax.top_k(probs, m)
+
+
+def gather_candidates(index: InvertedIndex, bucket_idx: jnp.ndarray):
+    """bucket_idx [R, Q, m] -> candidate ids [Q, R·m·max_load] (pad -1)."""
+    R, Q, m = bucket_idx.shape
+
+    def per_rep(members_r, idx_r):          # [B, ML], [Q, m]
+        return members_r[idx_r]             # [Q, m, ML]
+
+    cands = jax.vmap(per_rep)(index.members, bucket_idx)   # [R, Q, m, ML]
+    return jnp.moveaxis(cands, 0, 1).reshape(Q, -1)
+
+
+def candidate_frequencies_dense(cands: jnp.ndarray, L: int) -> jnp.ndarray:
+    """[Q, C] padded candidate ids -> [Q, L] occurrence counts."""
+    valid = cands >= 0
+    safe = jnp.where(valid, cands, 0)
+
+    def one(c, v):
+        return jax.ops.segment_sum(v.astype(jnp.float32), c, num_segments=L)
+
+    return jax.vmap(one)(safe, valid)
+
+
+def frequency_filter(freq: jnp.ndarray, tau: int):
+    """Keep candidates with count >= tau. Returns boolean mask [Q, L]."""
+    return freq >= tau
+
+
+def auto_tau(freq: jnp.ndarray, budget: int) -> jnp.ndarray:
+    """Beyond-paper: choose per-query tau so ~budget candidates survive.
+    freq [Q, L] -> tau [Q] (smallest tau with |{freq>=tau}| <= budget)."""
+    Q, L = freq.shape
+    kth = -jnp.sort(-freq, axis=1)[:, jnp.minimum(budget, L) - 1]
+    return jnp.maximum(kth, 1.0)
+
+
+def sorted_frequency_topC(cands: jnp.ndarray, C: int):
+    """Scalable FrequentOnes: per-query sort + run-length count, keep the C
+    most frequent candidates. cands [Q, C0] padded with -1.
+
+    Returns (ids [Q, C], counts [Q, C]) — ids are -1 where fewer than C
+    distinct candidates exist. O(C0 log C0) per query, no [Q, L] table: this
+    is the 100M-scale path (dense counting is fine up to L ~ 1e6 per shard).
+    """
+    C_eff = min(C, cands.shape[1])   # can't keep more than C0 candidates
+
+    def one(c):
+        s = jnp.sort(c)                                        # [-1 pads first]
+        is_start = jnp.concatenate([jnp.ones(1, bool), s[1:] != s[:-1]])
+        run_id = jnp.cumsum(is_start) - 1                       # [C0]
+        counts = jax.ops.segment_sum(jnp.ones_like(s, jnp.float32), run_id,
+                                     num_segments=s.shape[0])
+        cnt_pos = counts[run_id]
+        score = jnp.where(is_start & (s >= 0), cnt_pos, -1.0)   # runs only
+        top_cnt, top_pos = jax.lax.top_k(score, C_eff)
+        ids = jnp.where(top_cnt > 0, s[top_pos], -1)
+        if C_eff < C:                                           # pad to C
+            ids = jnp.concatenate([ids, jnp.full(C - C_eff, -1, ids.dtype)])
+            top_cnt = jnp.concatenate([top_cnt, jnp.zeros(C - C_eff)])
+        return ids.astype(jnp.int32), jnp.maximum(top_cnt, 0.0)
+
+    return jax.vmap(one)(cands)
+
+
+def rerank_gathered(queries, base, cand_ids, cand_counts, tau: int, k: int,
+                    metric: str = "angular"):
+    """Re-rank a COMPACT candidate list: gather base rows by id and score.
+
+    queries [Q,d], base [L,d], cand_ids [Q,C] (-1 pad), cand_counts [Q,C].
+    Returns (ids [Q,k], scores [Q,k]). Never materializes [Q, L].
+    """
+    valid = (cand_ids >= 0) & (cand_counts >= tau)
+    safe = jnp.maximum(cand_ids, 0)
+    vecs = base[safe]                                           # [Q, C, d]
+    if metric == "angular":
+        sim = jnp.einsum("qd,qcd->qc", queries, vecs,
+                         preferred_element_type=jnp.float32)
+    else:
+        sim = -jnp.sum((queries[:, None, :] - vecs.astype(jnp.float32)) ** 2,
+                       axis=-1)
+    sim = jnp.where(valid, sim, -jnp.inf)
+    scores, pos = jax.lax.top_k(sim, k)
+    return jnp.take_along_axis(cand_ids, pos, axis=1), scores
+
+
+def rerank(queries, base, cand_mask, k: int, metric: str = "angular"):
+    """True-distance re-rank of surviving candidates.
+
+    queries [Q, d], base [L, d], cand_mask [Q, L] -> top-k ids [Q, k].
+    Masked entries get -inf score. (The Pallas distance_topk kernel is the
+    fused TPU analogue; this is the jnp path.)
+    """
+    if metric == "angular":
+        sim = queries @ base.T
+    else:
+        sim = -(jnp.sum(queries ** 2, 1, keepdims=True)
+                - 2 * queries @ base.T + jnp.sum(base ** 2, 1)[None, :])
+    sim = jnp.where(cand_mask, sim, -jnp.inf)
+    _, idx = jax.lax.top_k(sim, k)
+    return idx
+
+
+def query_index(params, index: InvertedIndex, queries, *, m: int, tau: int,
+                L: int, loss_kind: str = "softmax_bce"):
+    """Full query path -> (cand_mask [Q, L], freq [Q, L], n_candidates [Q])."""
+    _, bidx = top_buckets(params, queries, m, loss_kind)
+    cands = gather_candidates(index, bidx)
+    freq = candidate_frequencies_dense(cands, L)
+    mask = frequency_filter(freq, tau)
+    return mask, freq, jnp.sum(mask, axis=1)
+
+
+def recall_at(cand_mask: jnp.ndarray, gt: jnp.ndarray) -> jnp.ndarray:
+    """recall k@k (paper's R10@10): fraction of gt rows present in the
+    candidate set (candidates ⊇ gt-member ⟺ true-distance rerank keeps it)."""
+    hits = jnp.take_along_axis(cand_mask, gt, axis=1)
+    return jnp.mean(hits.astype(jnp.float32))
+
+
+def precision_at(scores_mask, freq, queries, label_vecs, gt_labels, ks=(1, 3, 5)):
+    """XML P@k given candidate mask + per-candidate frequency as relevance."""
+    out = {}
+    for k in ks:
+        _, top = jax.lax.top_k(jnp.where(scores_mask, freq, -jnp.inf), k)
+        hit = (top[..., None] == gt_labels[:, None, :]).any(-1)
+        out[f"P@{k}"] = jnp.mean(hit.astype(jnp.float32))
+    return out

@@ -1,0 +1,50 @@
+"""IRLI vocabulary-retrieval head for LMs (DESIGN §4 / §8.1).
+
+A 256k-vocab softmax is an extreme-classification problem — exactly IRLI's
+XML scenario. The head maintains an IRLI partition over the vocabulary
+(labels = token ids, label vectors = output-embedding rows, Def. 2 affinity)
+and at serve time computes logits ONLY over the union of the top-m buckets
+from R reps: O(m·R·V/B) candidate tokens instead of V.
+
+Training the head is standard IRLI (core/index.py with label_vecs = embedding
+table). This module is the serve-time path: scorer -> buckets -> member gather
+-> candidate logits -> frequency-boosted scores, as a single jit-able fn.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.network import scorer_probs
+from repro.core.partition import InvertedIndex
+
+
+def candidate_token_logits(scorer_params, index: InvertedIndex, embed_table,
+                           h, *, m: int, loss_kind: str = "softmax_bce"):
+    """h: [Bq, d] final hidden states -> (cand_ids [Bq, C], logits [Bq, C]).
+
+    C = R * m * max_load candidates (padded with -1 -> logit -inf). The full
+    [Bq, V] logits are never materialized — the serving win measured in
+    benchmarks/bench_vocab_head.py.
+    """
+    probs = scorer_probs(scorer_params, h, loss_kind)      # [R, Bq, B]
+    _, bidx = jax.lax.top_k(probs, m)                       # [R, Bq, m]
+    cands = jax.vmap(lambda mem, idx: mem[idx])(index.members, bidx)
+    cands = jnp.moveaxis(cands, 0, 1).reshape(h.shape[0], -1)   # [Bq, C]
+    valid = cands >= 0
+    safe = jnp.where(valid, cands, 0)
+    rows = embed_table[safe]                                # [Bq, C, d]
+    logits = jnp.einsum("bd,bcd->bc", h, rows,
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(valid, logits, -jnp.inf)
+    return cands, logits
+
+
+def greedy_token(scorer_params, index: InvertedIndex, embed_table, h, *,
+                 m: int, loss_kind: str = "softmax_bce"):
+    """argmax over the candidate set only (dedup-free: duplicates share the
+    same logit so argmax is unaffected). Returns token ids [Bq]."""
+    cands, logits = candidate_token_logits(scorer_params, index, embed_table,
+                                           h, m=m, loss_kind=loss_kind)
+    best = jnp.argmax(logits, axis=1)
+    return jnp.take_along_axis(cands, best[:, None], axis=1)[:, 0]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused stable sigmoid-BCE loss + gradient epilogue.
+
+IRLI training evaluates BCE over [N, B] logits every step (B = 5k-20k). The
+unfused path writes logits, reads them for the loss, reads again for the
+gradient. This kernel computes per-tile loss partial-sums AND d(loss)/d(logits)
+in one pass (the backward w.r.t. logits is analytic: sigmoid(x) - y).
+
+Grid over (N, B) tiles; loss accumulated in a [1,1] SMEM scratch... actually
+per-tile partial sums are written to a [nN, nB] partials array and summed by
+the caller (keeps the kernel race-free and revision-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(logits_ref, targets_ref, partial_ref, grad_ref):
+    x = logits_ref[...].astype(jnp.float32)
+    y = targets_ref[...].astype(jnp.float32)
+    # stable BCE: max(x,0) - x*y + log1p(exp(-|x|))
+    loss = jnp.maximum(x, 0.0) - x * y + jnp.log1p(jnp.exp(-jnp.abs(x)))
+    partial_ref[0, 0] = jnp.sum(loss)
+    grad_ref[...] = jax.nn.sigmoid(x) - y
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "tb", "interpret"))
+def bce_logits(logits, targets, *, tn: int = 128, tb: int = 512,
+               interpret: bool = False):
+    """logits/targets [N, B] -> (mean loss scalar fp32, dlogits [N, B])."""
+    N, B = logits.shape
+    tn, tb = min(tn, N), min(tb, B)
+    assert N % tn == 0 and B % tb == 0
+    grid = (N // tn, B // tb)
+
+    partials, grad = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, tb), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, tb), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, tb), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+            jax.ShapeDtypeStruct((N, B), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, targets)
+    denom = jnp.float32(N)
+    return jnp.sum(partials) / denom, grad / denom

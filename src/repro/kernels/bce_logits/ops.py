@@ -1,0 +1,11 @@
+"""jit'd public wrapper: Pallas on TPU, oracle elsewhere."""
+import jax
+
+from repro.kernels.bce_logits.bce_logits import bce_logits
+from repro.kernels.bce_logits.ref import bce_logits_ref
+
+
+def fused_bce(logits, targets, *, tn: int = 128, tb: int = 512):
+    if jax.default_backend() == "tpu":
+        return bce_logits(logits, targets, tn=tn, tb=tb)
+    return bce_logits_ref(logits, targets)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: stable BCE from logits + analytic grad."""
+import jax
+import jax.numpy as jnp
+
+
+def bce_logits_ref(logits, targets):
+    x = logits.astype(jnp.float32)
+    y = targets.astype(jnp.float32)
+    loss = jnp.maximum(x, 0.0) - x * y + jnp.log1p(jnp.exp(-jnp.abs(x)))
+    N = x.shape[0]
+    return jnp.sum(loss) / N, (jax.nn.sigmoid(x) - y) / N

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused masked distance computation + running top-k.
+
+IRLI's re-rank phase scores the frequency-filtered candidates against the
+query with TRUE distances and keeps the top-k. The jnp path materializes a
+[Q, L] similarity matrix in HBM; this kernel streams corpus tiles through
+VMEM, applies the candidate mask inline, and carries a running top-k scratch —
+similarities never hit HBM (same streaming-top-k skeleton as irli_topk).
+
+Supports metric = "dot" (angular on normalized vectors) and "l2" (negated
+squared distance so top-k == nearest).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.irli_topk.irli_topk import _topk_merge
+
+
+def _kernel(q_ref, base_ref, mask_ref, out_v_ref, out_i_ref, acc_v, acc_i, *,
+            k: int, tl: int, metric: str):
+    li = pl.program_id(1)
+    nl = pl.num_programs(1)
+
+    @pl.when(li == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, -jnp.inf)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    q = q_ref[...]                    # [TQ, d]
+    base = base_ref[...]              # [TL, d]
+    m = mask_ref[...]                 # [TQ, TL] float (1 = candidate)
+
+    sim = jax.lax.dot_general(q, base, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if metric == "l2":
+        qn = jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+        bn = jnp.sum(base.astype(jnp.float32) ** 2, axis=1)[None, :]
+        sim = 2.0 * sim - qn - bn     # -(||q-b||^2), monotone for NN
+    sim = jnp.where(m > 0, sim, -jnp.inf)
+
+    tile_ids = li * tl + jax.lax.broadcasted_iota(jnp.int32, sim.shape, 1)
+    merged_ids = jnp.concatenate([acc_i[...], tile_ids], axis=1)
+    new_vals, new_pos, _ = _topk_merge(sim, acc_v[...], acc_i[...], k)
+    acc_v[...] = new_vals
+    acc_i[...] = jnp.take_along_axis(merged_ids, new_pos, axis=1)
+
+    @pl.when(li == nl - 1)
+    def _out():
+        out_v_ref[...] = acc_v[...]
+        out_i_ref[...] = acc_i[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "tq", "tl", "metric", "interpret"))
+def distance_topk(queries, base, mask, *, k: int, tq: int = 64, tl: int = 512,
+                  metric: str = "dot", interpret: bool = False):
+    """queries [Q,d], base [L,d], mask [Q,L] -> (scores [Q,k], ids [Q,k])."""
+    Q, d = queries.shape
+    L = base.shape[0]
+    tq, tl = min(tq, Q), min(tl, L)
+    assert Q % tq == 0 and L % tl == 0
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, tl=tl, metric=metric),
+        grid=(Q // tq, L // tl),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda qi, li: (qi, 0)),
+            pl.BlockSpec((tl, d), lambda qi, li: (li, 0)),
+            pl.BlockSpec((tq, tl), lambda qi, li: (qi, li)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda qi, li: (qi, 0)),
+            pl.BlockSpec((tq, k), lambda qi, li: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, base, mask)

@@ -1,0 +1,13 @@
+"""jit'd public wrapper: Pallas on TPU, oracle elsewhere."""
+import jax
+
+from repro.kernels.distance_topk.distance_topk import distance_topk
+from repro.kernels.distance_topk.ref import distance_topk_ref
+
+
+def rerank_topk(queries, base, mask, *, k: int, metric: str = "dot",
+                tq: int = 64, tl: int = 512):
+    if jax.default_backend() == "tpu":
+        return distance_topk(queries, base, mask, k=k, metric=metric,
+                             tq=tq, tl=tl)
+    return distance_topk_ref(queries, base, mask, k=k, metric=metric)

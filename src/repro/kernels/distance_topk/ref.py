@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for masked distance + top-k re-rank."""
+import jax
+import jax.numpy as jnp
+
+
+def distance_topk_ref(queries, base, mask, *, k: int, metric: str = "dot"):
+    sim = jnp.einsum("qd,ld->ql", queries, base,
+                     preferred_element_type=jnp.float32)
+    if metric == "l2":
+        qn = jnp.sum(queries.astype(jnp.float32) ** 2, 1, keepdims=True)
+        bn = jnp.sum(base.astype(jnp.float32) ** 2, 1)[None, :]
+        sim = 2.0 * sim - qn - bn
+    sim = jnp.where(mask > 0, sim, -jnp.inf)
+    vals, idx = jax.lax.top_k(sim, k)
+    return vals, idx.astype(jnp.int32)

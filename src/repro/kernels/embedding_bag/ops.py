@@ -1,0 +1,11 @@
+"""jit'd public wrapper: Pallas on TPU, oracle elsewhere."""
+import jax
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def bag_lookup_reduce(ids, weights, table, *, tb: int = 128):
+    if jax.default_backend() == "tpu":
+        return embedding_bag(ids, weights, table, tb=tb)
+    return embedding_bag_ref(ids, weights, table)

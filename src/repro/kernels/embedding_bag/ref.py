@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: EmbeddingBag via take + masked weighted sum."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(ids, weights, table):
+    """ids [N,P] (pad -1), weights [N,P], table [V,D] -> [N,D]."""
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    rows = jnp.take(table, safe, axis=0).astype(jnp.float32)   # [N,P,D]
+    w = jnp.where(valid, weights, 0.0).astype(jnp.float32)
+    return jnp.einsum("npd,np->nd", rows, w).astype(table.dtype)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: causal flash attention (one (batch, head) per program,
+KV streamed through VMEM with running max/sum-exp).
+
+This is the TPU runtime path for the LM family's `attend_train` (the jnp
+path materializes [B,H,qc,S] scores per chunk; this kernel keeps the score
+tile [TQ, TK] in VMEM and carries the online-softmax statistics). Grid:
+(B*H, S/TQ, S/TK) with the KV axis minor (sequential) so the VMEM
+accumulators carry across KV tiles.
+
+Causal masking is positional (absolute indices from the tile coordinates);
+fully-masked tiles still execute (Pallas grids are dense) but contribute
+zero via the -inf mask -> exp(0-scale) path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i, *, tq: int, tk: int,
+            scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, _NEG)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q = q_ref[0]                      # [TQ, D]
+    k = k_ref[0]                      # [TK, D]
+    v = v_ref[0]                      # [TK, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # causal mask on absolute positions
+    q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    s = jnp.where(q_pos >= k_pos, s, _NEG)
+
+    m_prev = m_i[...]                 # [TQ, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)            # [TQ, TK]
+    alpha = jnp.exp(m_prev - m_new)   # [TQ, 1]
+
+    l_i[...] = l_i[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc[...] = acc[...] * alpha + pv
+    m_i[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        o_ref[0] = (acc[...] / jnp.maximum(l_i[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tk", "interpret"))
+def flash_attention(q, k, v, *, tq: int = 128, tk: int = 128,
+                    interpret: bool = False):
+    """Causal flash attention. q,k,v: [B, H, S, D] -> o [B, H, S, D].
+
+    (GQA callers broadcast k/v to H query heads first — the kernel is
+    per-(batch,head); head_dim D should be a multiple of 128 on real TPU.)
+    """
+    B, H, S, D = q.shape
+    tq, tk = min(tq, S), min(tk, S)
+    assert S % tq == 0 and S % tk == 0
+    scale = 1.0 / (D ** 0.5)
+
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, tq=tq, tk=tk, scale=scale),
+        grid=(B * H, S // tq, S // tk),
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, D), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,11 @@
+"""jit'd public wrapper: Pallas flash attention on TPU, oracle elsewhere."""
+import jax
+
+from repro.kernels.flash_attn.flash_attn import flash_attention
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def causal_attention(q, k, v, *, tq: int = 128, tk: int = 128):
+    if jax.default_backend() == "tpu":
+        return flash_attention(q, k, v, tq=tq, tk=tk)
+    return flash_attention_ref(q, k, v)

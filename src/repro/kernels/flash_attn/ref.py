@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: causal softmax attention."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    """q,k,v: [B, H, S, D] -> [B, H, S, D] (causal)."""
+    B, H, S, D = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: fused scorer-output GEMM + streaming top-m over buckets.
+
+IRLI's query hot path is ``logits = h @ W2 + b2`` (H=1024, B=5k-20k) followed
+by top-m (m=5..10). Materializing [Q, B] logits in HBM then re-reading them
+for top_k doubles the HBM traffic of the whole query step. This kernel tiles
+B through VMEM and keeps a running top-m per query row in a VMEM scratch
+accumulator — logits never hit HBM.
+
+Grid: (Q // TQ, B // TB), B-minor (sequential) so the scratch carries across
+B tiles. Per tile: [TQ, H] @ [H, TB] on the MXU (fp32 accum), then m rounds
+of running argmax-extraction merged against the scratch.
+
+MXU alignment: TQ multiple of 8, TB multiple of 128, H padded to 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _topk_merge(scores, vals, idxs, m: int):
+    """Merge tile scores [TQ, TB+m]-style: extract m maxima iteratively.
+
+    scores: [TQ, T] fp32 candidate scores, cols = candidate ids ``cand_ids``
+    vals/idxs: running [TQ, m]
+    Returns updated (vals, idxs). Iterative extraction: m is tiny (5-10).
+    """
+    merged_vals = jnp.concatenate([vals, scores], axis=1)      # [TQ, m+T]
+    work = merged_vals
+    cols = jax.lax.broadcasted_iota(jnp.int32, work.shape, 1)
+    best_vs, best_ps = [], []
+    for _ in range(m):
+        best = jnp.max(work, axis=1)                            # [TQ]
+        pos = jnp.argmax(work, axis=1).astype(jnp.int32)        # [TQ]
+        best_vs.append(best)
+        best_ps.append(pos)
+        work = jnp.where(cols == pos[:, None], -jnp.inf, work)  # mask, no scatter
+    new_vals = jnp.stack(best_vs, axis=1)
+    new_pos = jnp.stack(best_ps, axis=1)
+    return new_vals, new_pos, merged_vals
+
+
+def _kernel(h_ref, w_ref, b_ref, out_v_ref, out_i_ref, acc_v, acc_i, *,
+            m: int, tb: int):
+    bi = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, -jnp.inf)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    h = h_ref[...]
+    w = w_ref[...]
+    bias = b_ref[...]
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + bias[None, :].astype(jnp.float32)
+
+    TQ = logits.shape[0]
+    vals, idxs = acc_v[...], acc_i[...]
+    # candidate ids for this tile: global bucket index
+    tile_ids = bi * tb + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    merged_ids = jnp.concatenate([idxs, tile_ids], axis=1)
+    new_vals, new_pos, _ = _topk_merge(logits, vals, idxs, m)
+    new_idxs = jnp.take_along_axis(merged_ids, new_pos, axis=1)
+    acc_v[...] = new_vals
+    acc_i[...] = new_idxs
+
+    @pl.when(bi == nb - 1)
+    def _out():
+        out_v_ref[...] = acc_v[...]
+        out_i_ref[...] = acc_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tq", "tb", "interpret"))
+def irli_topk(h, w2, b2, *, m: int, tq: int = 128, tb: int = 512,
+              interpret: bool = False):
+    """h: [Q, H], w2: [H, B], b2: [B] -> (vals [Q, m], idx [Q, m])."""
+    Q, H = h.shape
+    B = w2.shape[1]
+    tq = min(tq, Q)
+    tb = min(tb, B)
+    assert Q % tq == 0 and B % tb == 0, (Q, tq, B, tb)
+
+    grid = (Q // tq, B // tb)
+    out_v, out_i = pl.pallas_call(
+        functools.partial(_kernel, m=m, tb=tb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, H), lambda qi, bi: (qi, 0)),
+            pl.BlockSpec((H, tb), lambda qi, bi: (0, bi)),
+            pl.BlockSpec((tb,), lambda qi, bi: (bi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, m), lambda qi, bi: (qi, 0)),
+            pl.BlockSpec((tq, m), lambda qi, bi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, m), jnp.float32),
+            jax.ShapeDtypeStruct((Q, m), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, m), jnp.float32),
+            pltpu.VMEM((tq, m), jnp.int32),
+        ],
+        interpret=interpret,
+    )(h, w2, b2)
+    return out_v, out_i

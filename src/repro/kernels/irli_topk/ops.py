@@ -1,0 +1,12 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU, the jnp oracle
+elsewhere (this container is CPU — interpret mode is used by tests only)."""
+import jax
+
+from repro.kernels.irli_topk.irli_topk import irli_topk
+from repro.kernels.irli_topk.ref import irli_topk_ref
+
+
+def scorer_topk(h, w2, b2, *, m: int, tq: int = 128, tb: int = 512):
+    if jax.default_backend() == "tpu":
+        return irli_topk(h, w2, b2, m=m, tq=tq, tb=tb)
+    return irli_topk_ref(h, w2, b2, m=m)

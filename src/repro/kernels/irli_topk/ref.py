@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused scoring+top-m kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def irli_topk_ref(h, w2, b2, *, m: int):
+    """h [Q,H], w2 [H,B], b2 [B] -> (vals [Q,m] fp32, idx [Q,m] int32)."""
+    logits = jnp.einsum("qh,hb->qb", h, w2,
+                        preferred_element_type=jnp.float32)
+    logits = logits + b2[None, :].astype(jnp.float32)
+    vals, idx = jax.lax.top_k(logits, m)
+    return vals, idx.astype(jnp.int32)

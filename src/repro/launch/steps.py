@@ -1,0 +1,265 @@
+"""Step-function builders shared by all architecture configs.
+
+Each builder returns a pure function suitable for
+``jax.jit(step, in_shardings=..., out_shardings=..., donate_argnums=0)``:
+
+  train:  step(state, batch) -> (state, metrics)     state = {params, opt}
+  serve:  step(params, batch) -> outputs
+
+Optimizer-state sharding is ZeRO-style (configs/base.zero_state_spec): states
+mirror param sharding plus the data axis on the first divisible dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import zero_state_spec
+from repro.models.module import map_with_paths
+from repro.optim.optimizers import make_optimizer
+
+
+# ---------------------------------------------------------------- states ----
+def opt_state_specs(opt_kind: str, params_sds, param_specs, mesh):
+    """PartitionSpec tree for the optimizer state."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = sizes.get("data", 1)
+
+    def zero(path_tree_sds, path_tree_spec):
+        return jax.tree.map(
+            lambda s, sp: zero_state_spec(sp, s.shape, "data", dsize),
+            path_tree_sds, path_tree_spec,
+            is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+    if opt_kind == "adamw":
+        z = zero(params_sds, param_specs)
+        return {"step": P(), "m": z, "v": z, "master": z}
+    if opt_kind == "adamw_nomaster":
+        z = zero(params_sds, param_specs)
+        return {"step": P(), "m": z, "v": z}
+    if opt_kind == "adafactor":
+        def leaf(s, sp):
+            spec = list(sp) + [None] * (len(s.shape) - len(sp))
+            if s.ndim >= 2 and min(s.shape[-2:]) >= 128:
+                return {"vr": P(*spec[:-1]), "vc": P(*spec[:-2], spec[-1])}
+            return {"v": P(*spec)}
+        v = jax.tree.map(leaf, params_sds, param_specs,
+                         is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+        return {"step": P(), "v": v}
+    raise ValueError(opt_kind)
+
+
+def make_opt(opt_kind: str, **kw):
+    if opt_kind == "adamw_nomaster":
+        return make_optimizer("adamw", master_fp32=False, **kw)
+    return make_optimizer(opt_kind, **kw)
+
+
+# ------------------------------------------------------------ generic step --
+def build_train_step(loss_fn: Callable, opt_kind: str, **opt_kw):
+    """loss_fn(params, batch) -> (scalar, metrics dict)."""
+    opt = make_opt(opt_kind, **opt_kw)
+
+    def step(state, batch):
+        params, opt_state = state["params"], state["opt"]
+
+        def lf(p):
+            return loss_fn(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, info = opt.update(params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **info)
+        return {"params": params, "opt": opt_state}, metrics
+
+    return step, opt
+
+
+# ------------------------------------------------------------------ LM ------
+def build_lm_train_step(cfg, opt_kind: str, n_micro: int = 8, mesh=None,
+                        micro_split: str = "strided", **opt_kw):
+    """LM train step with gradient-accumulation microbatching.
+
+    Global batch [GB, S] is split into ``n_micro`` microbatches scanned
+    sequentially; each microbatch runs fwd+bwd under remat and accumulates
+    fp32 grads. Peak activation memory = ONE microbatch's layer-stack
+    (32x smaller than unaccumulated at GB=256) — the standard large-scale
+    recipe, required to fit the 16 GB/chip HBM budget (EXPERIMENTS.md §Dry-run).
+    """
+    from repro.models.transformer import lm_loss
+
+    opt = make_opt(opt_kind, **opt_kw)
+
+    def loss_fn(params, tokens, labels):
+        loss, metrics = lm_loss(params, cfg, tokens, labels)
+        return loss, metrics
+
+    def _micro_split(x, M):
+        # Two equivalent groupings (batch elements are exchangeable) with
+        # very different GSPMD outcomes — measured per arch in §Perf:
+        #   strided: [GB,S] -> [GB/M, M, S] -> moveaxis -> [M, GB/M, S].
+        #     Sharded dim stays major through the reshape; best for llama4
+        #     (EPxTP experts): 83 -> 42 GiB/device.
+        #   plain:   [GB,S] -> [M, GB/M, S] directly. Best for mixtral
+        #     (TP experts): 32 -> 10.8 GiB/device single-pod.
+        GB, S = x.shape
+        if micro_split == "plain":
+            return x.reshape(M, GB // M, S)
+        return jnp.moveaxis(x.reshape(GB // M, M, S), 1, 0)
+
+    def step(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        GB, S = batch["tokens"].shape
+        M = n_micro if GB % n_micro == 0 else 1
+        toks = _micro_split(batch["tokens"], M)
+        labs = _micro_split(batch["labels"], M)
+
+        grads0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def micro(acc, tl):
+            t, l = tl
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, t, l)
+            acc_g, acc_loss = acc
+            acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+            return (acc_g, acc_loss + loss), None
+
+        (grads, loss_sum), _ = jax.lax.scan(micro, (grads0, jnp.zeros((), jnp.float32)),
+                                            (toks, labs))
+        grads = jax.tree.map(lambda g: g / M, grads)
+        loss = loss_sum / M
+        params, opt_state, info = opt.update(params, grads, opt_state)
+        return {"params": params, "opt": opt_state}, dict(loss=loss, **info)
+
+    return step, opt
+
+
+def build_lm_prefill(cfg):
+    """Forward over the prompt; returns last-position logits + final hidden
+    (cache emission elided — identical compute profile, see DESIGN §5)."""
+    from repro.models.transformer import lm_backbone, _logits
+
+    def step(params, batch):
+        h, _ = lm_backbone(params, cfg, batch["tokens"])
+        last = h[:, -1, :]
+        return {"logits": _logits(params, cfg, last),
+                "hidden": last}
+
+    return step
+
+
+def build_lm_decode(cfg, context_len: int):
+    """One-token decode against a KV cache; greedy next token."""
+    from repro.models.transformer import lm_decode_step
+
+    def step(params, batch):
+        caches = batch["caches"]
+        logits, new_caches = lm_decode_step(params, cfg, batch["token"],
+                                            caches, batch["pos"])
+        return {"next_token": jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                "caches": new_caches}
+
+    return step
+
+
+# -------------------------------------------------------------- recsys ------
+def build_ctr_train_step(apply_fn: Callable, opt_kind: str = "adamw_nomaster",
+                         **opt_kw):
+    """apply_fn(params, batch) -> logit [B]; label under batch["label"]."""
+    from repro.models.layers import stable_bce_with_logits
+
+    def loss_fn(params, batch):
+        logit = apply_fn(params, batch)
+        loss = jnp.mean(stable_bce_with_logits(logit, batch["label"]))
+        return loss, {"bce": loss}
+
+    return build_train_step(loss_fn, opt_kind, **opt_kw)
+
+
+def build_ctr_serve(apply_fn: Callable):
+    def step(params, batch):
+        return {"prob": jax.nn.sigmoid(apply_fn(params, batch))}
+    return step
+
+
+def build_retrieval_serve(k: int = 100):
+    """Two-tower candidate scoring: query [Bq, d] vs items [N, d] -> top-k.
+    The brute-force baseline the IRLI index accelerates (see core/)."""
+    def step(params, batch):
+        table = params["item_table"]["table"]
+        scores = jnp.einsum("qd,nd->qn", batch["query"], table,
+                            preferred_element_type=jnp.float32)
+        vals, idx = jax.lax.top_k(scores, k)
+        return {"ids": idx.astype(jnp.int32), "scores": vals}
+    return step
+
+
+# ----------------------------------------------------------------- GNN ------
+def build_gnn_node_train(cfg, n_classes: int, opt_kind="adamw_nomaster",
+                         loss_on=None, **opt_kw):
+    """Node classification; loss over all (or ``loss_on`` masked) nodes."""
+    from repro.models.gnn import schnet_apply
+
+    def loss_fn(params, batch):
+        out = schnet_apply(params, cfg, batch["feats"], batch["src"],
+                           batch["dst"], batch["dist"])
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], 1)[:, 0]
+        if "node_mask" in batch:
+            m = batch["node_mask"]
+            loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+        else:
+            loss = jnp.mean(nll)
+        return loss, {"nll": loss}
+
+    return build_train_step(loss_fn, opt_kind, **opt_kw)
+
+
+def build_gnn_energy_train(cfg, n_graphs: int, opt_kind="adamw_nomaster",
+                           **opt_kw):
+    """Molecule energy regression (batched small graphs)."""
+    from repro.models.gnn import schnet_apply
+
+    def loss_fn(params, batch):
+        e = schnet_apply(params, cfg, batch["types"], batch["src"],
+                         batch["dst"], batch["dist"],
+                         graph_ids=batch["graph_ids"], n_graphs=n_graphs)
+        loss = jnp.mean((e[:, 0] - batch["energy"]) ** 2)
+        return loss, {"mse": loss}
+
+    return build_train_step(loss_fn, opt_kind, **opt_kw)
+
+
+# ----------------------------------------------------------------- IRLI -----
+def build_irli_train_step(scorer_cfg, n_buckets: int, opt_kind="adamw_nomaster",
+                          **opt_kw):
+    """Production-scale IRLI scorer training step (the paper's §5.3 system)."""
+    from repro.core.network import scorer_loss
+    from repro.core.partition import bucket_targets
+
+    def loss_fn(params, batch):
+        targets = bucket_targets(batch["assign"], batch["label_ids"],
+                                 batch["label_mask"], n_buckets)
+        loss = scorer_loss(params, scorer_cfg, batch["x"], targets)
+        return loss, {"bce": loss}
+
+    return build_train_step(loss_fn, opt_kind, **opt_kw)
+
+
+def build_irli_serve(mesh, m: int, tau: int, k: int, loss_kind="softmax_bce",
+                     metric="angular"):
+    """Production sharded-corpus IRLI query (paper §5.3 / Fig. 5-6): every
+    chip = one paper "node" owning L/P vectors + its R-rep inverted index;
+    shard_map with one tiny all_gather merge."""
+    from repro.core.distributed import make_production_search
+
+    search = make_production_search(mesh, m=m, tau=tau, k=k,
+                                    loss_kind=loss_kind, metric=metric)
+
+    def step(params, batch):
+        ids, scores = search(params["scorer"], params["members"],
+                             params["base"], batch["queries"])
+        return {"ids": ids, "scores": scores}
+
+    return step

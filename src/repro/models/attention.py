@@ -1,0 +1,190 @@
+"""Grouped-query attention for the LM family.
+
+Supports: MHA/GQA/MQA, RoPE / NoPE, qk-norm (Qwen3), sliding-window (Mixtral),
+chunked-local (Llama-4), causal full. Two execution modes:
+
+  - ``attend_train``: [B,S] self-attention, exact softmax computed in query
+    chunks (lax.scan) so the peak score buffer is [B,H,q_chunk,S] instead of
+    [B,H,S,S]. This is the pure-JAX path used for lowering/dry-run; the Pallas
+    flash kernel in kernels/ is the TPU runtime analogue.
+  - ``attend_decode``: one new token against a KV cache, with position masking
+    (full), ring-buffer windows (SWA) or chunk masking (chunked-local).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.module import constrain_first
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    kind: str = "full"          # full | swa | chunked
+    window: int = 4096          # for swa
+    chunk: int = 8192           # for chunked
+    use_rope: bool = True       # False => NoPE (llama4 global layers)
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    q_chunk: int = 1024         # training-time query chunking
+    logit_cap: float = 0.0      # soft cap (0 = off)
+    # sequence-parallel attention: shard q positions over "model" instead of
+    # heads. Required when n_heads doesn't divide the model axis (llama4:
+    # 40 heads vs 16) — GSPMD otherwise shards head_dim (the QK contraction)
+    # and all-reduces the SCORES x384 (720 GiB/device/step — §Perf).
+    seq_shard: bool = False
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "q_proj": L.dense_init(kq, cfg.d_model, cfg.n_heads * cfg.head_dim, dtype, use_bias=False),
+        "k_proj": L.dense_init(kk, cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype, use_bias=False),
+        "v_proj": L.dense_init(kv, cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype, use_bias=False),
+        "o_proj": L.dense_init(ko, cfg.n_heads * cfg.head_dim, cfg.d_model, dtype, use_bias=False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(cfg.head_dim, dtype)
+        p["k_norm"] = L.rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+def _qkv(p, cfg: AttnConfig, x, positions):
+    B, S, _ = x.shape
+    q = L.dense_apply(p["q_proj"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = L.dense_apply(p["k_proj"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense_apply(p["v_proj"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm_apply(p["q_norm"], q)
+        k = L.rmsnorm_apply(p["k_norm"], k)
+    if cfg.use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(kind: str, q_pos, k_pos, window: int, chunk: int):
+    """Boolean [.., Sq, Sk] mask: True = attend."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    if kind == "full":
+        return causal
+    if kind == "swa":
+        near = q_pos[..., :, None] - k_pos[..., None, :] < window
+        return causal & near
+    if kind == "chunked":
+        same_chunk = (q_pos[..., :, None] // chunk) == (k_pos[..., None, :] // chunk)
+        return causal & same_chunk
+    raise ValueError(kind)
+
+
+def _sdpa(q, k, v, mask, cfg: AttnConfig):
+    """q:[B,Sq,H,D] k,v:[B,Sk,Kv,D] mask:[B or 1, Sq, Sk] -> [B,Sq,H*D]."""
+    B, Sq, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv  # queries per kv head
+    qg = q.reshape(B, Sq, Kv, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / (D ** 0.5)
+    if cfg.logit_cap > 0:
+        scores = cfg.logit_cap * jnp.tanh(scores / cfg.logit_cap)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    return out.reshape(B, Sq, H * D)
+
+
+def attend_train(p, cfg: AttnConfig, x, positions=None):
+    """Causal self-attention over [B,S,d_model], query-chunked."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(p, cfg, x, positions)
+
+    if cfg.seq_shard:
+        # context-parallel layout: q positions over "model", kv replicated
+        q = constrain_first(q, P(("pod", "data"), "model", None, None),
+                            P("data", "model", None, None))
+        k = constrain_first(k, P(("pod", "data"), None, None, None),
+                            P("data", None, None, None))
+        v = constrain_first(v, P(("pod", "data"), None, None, None),
+                            P("data", None, None, None))
+
+    qc = min(cfg.q_chunk, S)
+    if S % qc != 0 or cfg.seq_shard:
+        qc = S  # unchunked: seq-sharding already bounds per-device scores
+    n_chunks = S // qc
+
+    if n_chunks == 1:
+        mask = _mask(cfg.kind, positions, positions, cfg.window, cfg.chunk)
+        out = _sdpa(q, k, v, mask, cfg)
+    else:
+        qs = q.reshape(B, n_chunks, qc, cfg.n_heads, cfg.head_dim)
+        ps = positions.reshape(B, n_chunks, qc)
+
+        def body(carry, inp):
+            qi, pi = inp  # [B,qc,H,D], [B,qc]
+            mask = _mask(cfg.kind, pi, positions, cfg.window, cfg.chunk)
+            return carry, _sdpa(qi, k, v, mask, cfg)
+
+        _, outs = jax.lax.scan(
+            jax.checkpoint(body),
+            None,
+            (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(ps, 1, 0)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.n_heads * cfg.head_dim)
+
+    return L.dense_apply(p["o_proj"], out)
+
+
+def attend_decode(p, cfg: AttnConfig, x, cache_k, cache_v, pos):
+    """One-step decode. x: [B,1,d_model]; cache_[kv]: [B,Sc,Kv,D]; pos: [B] int32.
+
+    For ``swa`` the cache is a ring buffer of length ``window`` (write index
+    pos % window); for full/chunked it is the full context. Returns
+    (out [B,1,d_model], new_k, new_v).
+    """
+    B = x.shape[0]
+    Sc = cache_k.shape[1]
+    positions = pos[:, None]  # [B,1]
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+
+    if cfg.kind == "swa":
+        slot = pos % Sc
+        cache_k = jax.vmap(lambda c, kn, s: jax.lax.dynamic_update_slice(
+            c, kn, (s, 0, 0)))(cache_k, k_new, slot)
+        cache_v = jax.vmap(lambda c, vn, s: jax.lax.dynamic_update_slice(
+            c, vn, (s, 0, 0)))(cache_v, v_new, slot)
+        k_pos_rel = jnp.arange(Sc)[None, :]  # slot index
+        # slot i holds absolute position: pos - ((pos - i) % Sc)
+        abs_pos = pos[:, None] - ((pos[:, None] - k_pos_rel) % Sc)
+        valid = abs_pos >= 0
+        mask = (valid & (abs_pos <= pos[:, None]))[:, None, :]  # [B,1,Sc]
+    else:
+        cache_k = jax.vmap(lambda c, kn, s: jax.lax.dynamic_update_slice(
+            c, kn, (s, 0, 0)))(cache_k, k_new, pos)
+        cache_v = jax.vmap(lambda c, vn, s: jax.lax.dynamic_update_slice(
+            c, vn, (s, 0, 0)))(cache_v, v_new, pos)
+        k_pos = jnp.arange(Sc)[None, :]
+        mask = _mask(cfg.kind, positions, jnp.broadcast_to(k_pos, (B, Sc)),
+                     cfg.window, cfg.chunk)  # [B,1,Sc]
+
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    return L.dense_apply(p["o_proj"], out), cache_k, cache_v
+
+
+def decode_cache_len(cfg: AttnConfig, context_len: int) -> int:
+    """Physical KV-cache length for a given logical context length."""
+    if cfg.kind == "swa":
+        return min(cfg.window, context_len)
+    return context_len

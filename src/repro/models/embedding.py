@@ -1,0 +1,66 @@
+"""EmbeddingBag and sparse-feature embedding substrate (JAX has no native
+EmbeddingBag / CSR — built from jnp.take + jax.ops.segment_sum per spec).
+
+Layouts:
+  - single-hot fields: ids [B, n_fields] -> [B, n_fields, dim] (plain take)
+  - multi-hot bags (CSR-style): values [nnz], segment_ids [nnz] -> [n_bags, dim]
+    with sum/mean/max reduction and optional per-sample weights
+  - table rows shardable over the full device grid (dim 0 PartitionSpec
+    ("data","model")); lookups lower to gathers + collectives under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bag_init(key, vocab: int, dim: int, dtype=jnp.float32, scale: float = 0.01):
+    tbl = jax.random.normal(key, (vocab, dim), jnp.float32) * scale
+    return {"table": tbl.astype(dtype)}
+
+
+def bag_lookup(p, ids):
+    """Single-hot lookup: ids [...,] -> [..., dim]."""
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def bag_reduce(p, values, segment_ids, n_bags: int, *, mode: str = "sum",
+               weights=None):
+    """Multi-hot bag lookup + segment reduction.
+
+    values:      [nnz] int32 row ids
+    segment_ids: [nnz] int32 bag index (sorted or not)
+    weights:     optional [nnz] per-sample weights (sum/mean modes)
+    """
+    rows = jnp.take(p["table"], values, axis=0)  # [nnz, dim]
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, rows.dtype),
+                                  segment_ids, num_segments=n_bags)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+# --------------------------------------------------- multi-table frontend ---
+def tables_init(key, vocab_sizes: list[int], dim: int, dtype=jnp.float32):
+    """One stacked param per distinct vocab size would fragment sharding; we
+    instead concatenate all tables into ONE [sum(vocab), dim] mega-table with
+    static per-field offsets — a single shardable gather target (the
+    quotient-remainder-free version of MLPerf DLRM table fusion)."""
+    total = int(sum(vocab_sizes))
+    offsets = jnp.asarray([0] + list(jnp.cumsum(jnp.asarray(vocab_sizes))[:-1]),
+                          jnp.int32)
+    tbl = bag_init(key, total, dim, dtype)
+    return {"mega": tbl}, offsets
+
+
+def tables_lookup(p, offsets, ids):
+    """ids [B, n_fields] (one id per field) -> [B, n_fields, dim]."""
+    flat = ids + offsets[None, :]
+    return bag_lookup(p["mega"], flat)

@@ -1,0 +1,208 @@
+"""Core pure-JAX layers: linear, embedding, norms, rotary, MLPs, recurrent cells.
+
+Conventions:
+  - init(key, ...) -> nested dict params; apply(params, x, ...) -> y
+  - all matmuls accumulate in fp32 (``preferred_element_type``) and cast back
+  - param dtype is controlled by the caller (configs default bf16 for LM-scale)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _acc(x, y, **kw):
+    """Matmul helper with fp32 accumulation, result cast to x.dtype."""
+    out = jnp.einsum(kw.pop("eq"), x, y, preferred_element_type=jnp.float32, **kw)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- dense -----
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, use_bias: bool = True,
+               scale: float | None = None):
+    kk, _ = jax.random.split(key)
+    scale = scale if scale is not None else 1.0 / (d_in ** 0.5)
+    p = {"kernel": (jax.random.normal(kk, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    # bf16 inputs -> bf16 dot output: the TPU MXU accumulates in f32
+    # internally either way, and emitting bf16 halves the bytes of every
+    # downstream tensor-parallel psum (§Perf: mixtral coll 38.6 -> measured
+    # below). fp32 inputs keep fp32 end to end.
+    y = jnp.einsum("...i,io->...o", x, p["kernel"])
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding ----
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32, scale: float = 1.0):
+    tbl = jax.random.normal(key, (vocab, d), jnp.float32) * (scale / (d ** 0.5))
+    return {"table": tbl.astype(dtype)}
+
+
+def embedding_apply(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def embedding_attend(p, x):
+    """Logits against the (possibly tied) embedding table: x @ table^T."""
+    return jnp.einsum("...d,vd->...v", x, p["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# ------------------------------------------------------------------ norms ---
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rotary ---
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    angles = angles[..., None, :]                              # [..., S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLPs ---
+ACTS: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def glu_mlp_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype, use_bias=False),
+        "up": dense_init(k2, d, d_ff, dtype, use_bias=False),
+        "down": dense_init(k3, d_ff, d, dtype, use_bias=False),
+    }
+
+
+def glu_mlp_apply(p, x, act: str = "gelu"):
+    g = ACTS[act](dense_apply(p["gate"], x))
+    u = dense_apply(p["up"], x)
+    return dense_apply(p["down"], g * u)
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32, use_bias: bool = True):
+    """Plain MLP with len(dims)-1 layers: dims=[in, h1, ..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"fc{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype, use_bias)
+            for i in range(len(dims) - 1)}
+
+
+def mlp_apply(p, x, act: str = "relu", final_act: bool = False):
+    n = len(p)
+    for i in range(n):
+        x = dense_apply(p[f"fc{i}"], x)
+        if i < n - 1 or final_act:
+            x = ACTS[act](x)
+    return x
+
+
+# --------------------------------------------------------- recurrent cells --
+def gru_init(key, d_in: int, d_h: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": dense_init(k1, d_in, 3 * d_h, dtype, use_bias=True),
+        "wh": dense_init(k2, d_h, 3 * d_h, dtype, use_bias=False),
+    }
+
+
+def gru_cell(p, h, x):
+    """Standard GRU cell. h: [B, H], x: [B, D]."""
+    gx = dense_apply(p["wx"], x)
+    gh = dense_apply(p["wh"], h)
+    d_h = h.shape[-1]
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return (1 - z) * n + z * h
+
+
+def augru_cell(p, h, x, att):
+    """Attentional-update GRU (DIEN): update gate scaled by attention score."""
+    gx = dense_apply(p["wx"], x)
+    gh = dense_apply(p["wh"], h)
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh) * att[..., None]  # attention-scaled update gate
+    n = jnp.tanh(nx + r * nh)
+    return (1 - z) * h + z * n
+
+
+def gru_scan(p, xs, h0, cell=gru_cell, att=None):
+    """Run a GRU over time. xs: [B, T, D] -> outputs [B, T, H], final h."""
+    xs_t = jnp.swapaxes(xs, 0, 1)  # [T, B, D]
+
+    if att is None:
+        def step(h, x):
+            h = cell(p, h, x)
+            return h, h
+        h_last, ys = jax.lax.scan(step, h0, xs_t)
+    else:
+        att_t = jnp.swapaxes(att, 0, 1)  # [T, B]
+
+        def step(h, xa):
+            x, a = xa
+            h = cell(p, h, x, a)
+            return h, h
+        h_last, ys = jax.lax.scan(step, h0, (xs_t, att_t))
+    return jnp.swapaxes(ys, 0, 1), h_last
+
+
+# ----------------------------------------------------------- segment ops ----
+def segment_softmax(scores, segment_ids, num_segments: int):
+    """Softmax over variable-size segments (edge-softmax for graphs)."""
+    seg_max = jax.ops.segment_max(scores, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isneginf(seg_max), 0.0, seg_max)
+    ex = jnp.exp(scores - seg_max[segment_ids])
+    seg_sum = jax.ops.segment_sum(ex, segment_ids, num_segments=num_segments)
+    return ex / (seg_sum[segment_ids] + 1e-9)
+
+
+def stable_bce_with_logits(logits, labels):
+    """Numerically-stable elementwise BCE from logits (fp32)."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))

@@ -1,0 +1,167 @@
+"""Minimal pure-functional module substrate.
+
+Params are nested dicts of jnp arrays. Every layer is a plain function pair:
+``init(key, ...) -> params`` and ``apply(params, x, ...) -> y``. No framework
+magic — this keeps lowering fast (critical for 512-device dry-run compiles) and
+makes sharding rules trivially expressible as path-regex -> PartitionSpec.
+
+Utilities here:
+  - tree_paths / flatten_with_paths: "a/b/c" path names for rule matching
+  - shard_rules: ordered [(regex, PartitionSpec)] applied to a param tree
+  - eval_shape_init: build a ShapeDtypeStruct tree without allocating
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict[str, Params | jnp.ndarray]
+
+
+def flatten_with_paths(tree: Params, prefix: str = "") -> list[tuple[str, Any]]:
+    """Flatten a nested-dict param tree into [("a/b/c", leaf), ...]."""
+    out: list[tuple[str, Any]] = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.extend(flatten_with_paths(tree[k], f"{prefix}{k}/"))
+    else:
+        out.append((prefix[:-1] if prefix.endswith("/") else prefix, tree))
+    return out
+
+
+def tree_paths(tree: Params) -> list[str]:
+    return [p for p, _ in flatten_with_paths(tree)]
+
+
+def map_with_paths(fn: Callable[[str, Any], Any], tree: Params, prefix: str = "") -> Params:
+    if isinstance(tree, dict):
+        return {k: map_with_paths(fn, v, f"{prefix}{k}/") for k, v in tree.items()}
+    return fn(prefix[:-1] if prefix.endswith("/") else prefix, tree)
+
+
+class ShardRules:
+    """Ordered path-regex -> PartitionSpec rules for a param tree.
+
+    The FIRST matching rule wins. A final catch-all ``(".*", P())`` replicates
+    anything unmatched; ``strict=True`` (used in tests) errors instead so every
+    new param family must get an explicit rule.
+    """
+
+    def __init__(self, rules: Sequence[tuple[str, P]], strict: bool = False):
+        self.rules = [(re.compile(pat), spec) for pat, spec in rules]
+        self.strict = strict
+
+    def spec_for(self, path: str, ndim: int | None = None) -> P:
+        for pat, spec in self.rules:
+            if pat.search(path):
+                return spec
+        if self.strict:
+            raise ValueError(f"no sharding rule matches param {path!r}")
+        return P()
+
+    def specs(self, params: Params) -> Params:
+        """PartitionSpec tree matching ``params`` (works on arrays or SDS)."""
+        return map_with_paths(lambda p, v: self.spec_for(p, getattr(v, "ndim", None)), params)
+
+    def check_divisible(self, params: Params, mesh) -> list[str]:
+        """Return a list of problems (empty == all spec dims divide the mesh)."""
+        problems = []
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for path, leaf in flatten_with_paths(params):
+            spec = self.spec_for(path)
+            for dim, axes in enumerate(spec):
+                if axes is None:
+                    continue
+                names = (axes,) if isinstance(axes, str) else tuple(axes)
+                total = 1
+                for n in names:
+                    total *= axis_sizes[n]
+                if dim >= leaf.ndim or leaf.shape[dim] % total != 0:
+                    problems.append(
+                        f"{path}: shape {leaf.shape} dim {dim} not divisible by {names}={total}"
+                    )
+        return problems
+
+
+def eval_shape_init(init_fn: Callable[..., Params], *args, **kwargs) -> Params:
+    """Run an init function abstractly -> tree of ShapeDtypeStruct (no memory)."""
+    return jax.eval_shape(init_fn, *args, **kwargs)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(jnp.size(v)) for _, v in flatten_with_paths(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(jnp.size(v)) * v.dtype.itemsize for _, v in flatten_with_paths(params))
+
+
+def cast_floating(params: Params, dtype) -> Params:
+    def _cast(_, v):
+        if jnp.issubdtype(v.dtype, jnp.floating):
+            return v.astype(dtype)
+        return v
+
+    return map_with_paths(_cast, params)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def constrain(x, spec: P):
+    """Guarded with_sharding_constraint: applies only when tracing under a
+    mesh whose axes cover ``spec`` and divide the constrained dims. No-op on
+    meshless CPU tests, so model code can pin layouts unconditionally."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not am.axis_names:
+        return x
+    sizes = dict(zip(am.axis_names, am.axis_sizes))
+    for dim, part in enumerate(spec):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        total = 1
+        for a in axes:
+            if a not in sizes:
+                return x
+            total *= sizes[a]
+        if dim >= x.ndim or x.shape[dim] % total != 0:
+            return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_first(x, *specs: P):
+    """Apply the first spec whose axes exist and divide x's dims."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not am.axis_names:
+        return x
+    sizes = dict(zip(am.axis_names, am.axis_sizes))
+    for spec in specs:
+        ok = True
+        for dim, part in enumerate(spec):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            total = 1
+            for a in axes:
+                if a not in sizes:
+                    ok = False
+                    break
+                total *= sizes[a]
+            if not ok or dim >= x.ndim or x.shape[dim] % total != 0:
+                ok = False
+                break
+        if ok:
+            return jax.lax.with_sharding_constraint(x, spec)
+    return x

@@ -1,0 +1,290 @@
+"""Mixture-of-Experts block (GShard/Mixtral-style capacity dispatch) with an
+optional IRLI-flavoured router.
+
+Routing modes:
+  - ``topk``            — standard softmax top-k with auxiliary load-balance loss
+  - ``irli_kchoice``    — beyond-paper: the paper's power-of-K-choices applied to
+    expert routing. Each token considers its top-K scoring experts and is
+    assigned greedily to the least-loaded — aux-loss-free balance (DESIGN §8).
+
+Dispatch is capacity-bounded dense einsum (TPU-friendly: no dynamic shapes).
+Expert weights are stacked [E, ...] so the expert axis can be mesh-sharded
+(expert parallelism) or the ff axis sharded (tensor parallelism) per config.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.module import constrain, constrain_first
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router: str = "topk"          # topk | irli_kchoice
+    router_k_choices: int = 4      # K for irli_kchoice (>= top_k)
+    n_shared_experts: int = 0      # llama4-style always-on shared expert
+    act: str = "silu"
+    ffn_chunk: int = 65536         # max tokens dispatched at once (memory cap)
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    kr, ke, ks = jax.random.split(key, 3)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+
+    def expert_stack(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        s = 1.0 / (d ** 0.5)
+        return {
+            "gate": (jax.random.normal(k1, (E, d, f), jnp.float32) * s).astype(dtype),
+            "up": (jax.random.normal(k2, (E, d, f), jnp.float32) * s).astype(dtype),
+            "down": (jax.random.normal(k3, (E, f, d), jnp.float32) / (f ** 0.5)).astype(dtype),
+        }
+
+    p = {
+        "router": L.dense_init(kr, d, E, dtype, use_bias=False),
+        "experts": expert_stack(ke),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = L.glu_mlp_init(ks, d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)  # pad to multiple of 8 for TPU layouts
+
+
+def _route_topk(logits, cfg: MoEConfig):
+    """Standard top-k routing. logits: [T, E] -> (weights [T,k], idx [T,k], aux)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+    # GShard aux loss: E * sum_e(frac_tokens_e * mean_prob_e)
+    T, E = logits.shape
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _route_irli_kchoice(logits, cfg: MoEConfig):
+    """Power-of-K-choices routing (paper's Thm.2 applied to experts).
+
+    Sequential least-loaded-of-top-K assignment via lax.scan over tokens.
+    Exact analogue of IRLI re-partitioning: per token, among its top
+    ``router_k_choices`` experts pick the currently least-loaded; repeat for
+    each of the ``top_k`` slots (masking already-picked experts).
+    """
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    K = max(cfg.router_k_choices, cfg.top_k)
+    topw, topi = jax.lax.top_k(probs, K)  # [T,K]
+
+    def token_step(load, inp):
+        w_k, i_k = inp  # [K], [K]
+        picked_idx = jnp.zeros((cfg.top_k,), jnp.int32)
+        picked_w = jnp.zeros((cfg.top_k,), jnp.float32)
+        taken = jnp.zeros((K,), bool)
+
+        def slot(carry, _):
+            load, picked_idx, picked_w, taken, s = carry
+            cand_load = jnp.where(taken, jnp.inf, load[i_k])
+            j = jnp.argmin(cand_load)  # least-loaded of remaining top-K
+            e = i_k[j]
+            load = load.at[e].add(1.0)
+            picked_idx = picked_idx.at[s].set(e)
+            picked_w = picked_w.at[s].set(w_k[j])
+            taken = taken.at[j].set(True)
+            return (load, picked_idx, picked_w, taken, s + 1), None
+
+        (load, picked_idx, picked_w, _, _), _ = jax.lax.scan(
+            slot, (load, picked_idx, picked_w, taken, 0), None, length=cfg.top_k)
+        return load, (picked_w, picked_idx)
+
+    load0 = jnp.zeros((E,), jnp.float32)
+    _, (w, idx) = jax.lax.scan(token_step, load0, (topw, topi))
+    w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+    return w, idx, jnp.zeros((), jnp.float32)  # no aux loss needed
+
+
+def moe_apply(p, cfg: MoEConfig, x):
+    """x: [B, S, d] -> (y, aux_loss). Capacity-bounded dense dispatch.
+
+    When T = B*S exceeds ``ffn_chunk``, tokens are processed in scanned
+    chunks (the FFN is position-independent): bounds the [E, C, d_ff]
+    dispatch intermediates at prefill scale (32k x 32 tokens would otherwise
+    need ~90 GiB/device — EXPERIMENTS.md §Perf).
+    """
+    B, S, d = x.shape
+    T = B * S
+
+    # Chunk over the SEQUENCE dim (keeps the sharded batch dim intact — a
+    # flat [B*S] reshape would merge the data-sharded axis and force XLA to
+    # materialize unsharded 16 GiB scan buffers; measured in §Perf).
+    s_chunk = max(1, cfg.ffn_chunk // max(B, 1))
+    if T > cfg.ffn_chunk and S % s_chunk == 0 and S // s_chunk > 1:
+        n = S // s_chunk
+        xs = jnp.moveaxis(x.reshape(B, n, s_chunk, d), 1, 0)   # [n,B,sc,d]
+
+        def chunk(carry, xc):
+            # PER-ROW dispatch: capacity buffers carry the data-sharded
+            # batch dim, so dispatch/combine never cross the data axis
+            # (flat-token dispatch all-reduced [E,C,d] buffers x512 per
+            # step: 2.8 TB/device collective traffic — §Perf iteration 1).
+            y, aux = _moe_rows(p, cfg, xc)
+            return carry, (y, aux)
+
+        _, (ys, auxs) = jax.lax.scan(jax.checkpoint(chunk), None, xs)
+        return jnp.moveaxis(ys, 0, 1).reshape(B, S, d), jnp.sum(auxs)
+
+    y, aux = _moe_tokens(p, cfg, x.reshape(T, d))
+    return y.reshape(B, S, d), aux
+
+
+def _moe_rows(p, cfg: MoEConfig, x):
+    """Per-batch-row capacity dispatch. x: [B, T, d] -> (y [B, T, d], aux).
+
+    Every buffer keeps the leading batch dim (data-sharded): routing,
+    position-in-queue, dispatch [B, E, C_row, d] and combine are row-local.
+    Cross-device traffic reduces to the expert einsums' own needs: model-axis
+    psum for TP experts (mixtral) / expert all-to-all for EP (llama4).
+    """
+    B, T, d = x.shape
+    logits = L.dense_apply(p["router"], x)                   # [B, T, E]
+    E = cfg.n_experts
+    C = _capacity(cfg, T)                                     # per-row capacity
+
+    if cfg.router == "irli_kchoice":
+        w, idx, aux = jax.vmap(lambda lg: _route_irli_kchoice(lg, cfg))(logits)
+        aux = jnp.mean(aux)
+    else:
+        w, idx, aux = jax.vmap(lambda lg: _route_topk(lg, cfg))(logits)
+        aux = jnp.mean(aux)
+
+    k = cfg.top_k
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)          # [B, T, k, E]
+    flat = onehot.reshape(B, T * k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) * flat - 1            # per-row queues
+    pos = jnp.max(pos_in_e, axis=-1).reshape(B, T, k)
+    keep = (pos < C) & (pos >= 0)
+    w = jnp.where(keep, w, 0.0)
+
+    # Per-SLOT dispatch straight from x (indices aligned with the token dim):
+    # scatter-add OF x transposes to a gather of the cotangent — the earlier
+    # gather-then-scatter formulation put a [B,S,d] scatter-add in the
+    # backward, which GSPMD served with a d-sharded all-gather x512
+    # (1.5 TB/device on this cell — §Perf iteration 2).
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T))
+    disp = jnp.zeros((B, E, C, d), x.dtype)
+    for j in range(k):
+        e_j = idx[:, :, j]
+        c_j = jnp.clip(pos[:, :, j], 0, C - 1)
+        v_j = jnp.where(keep[:, :, j, None], x, 0.0)
+        disp = disp.at[b_idx, e_j, c_j].add(v_j)
+    # disp [B, E, C, d] layout by expert sharding scheme:
+    #  - EPxTP (llama4: E over model, expert d over data): tokens replicate
+    #    over batch, d over data to line up with the weights — the data axis
+    #    cannot serve both batch and weight-d (x512 reshards otherwise).
+    #  - TP-over-f (mixtral): keep batch on data; E/C/d replicated locally.
+    if cfg.n_experts % 16 == 0:   # EP regime (mesh model axis is 16)
+        disp = constrain_first(disp, P(None, "model", None, "data"),
+                               P(None, "model", None, None))
+    else:
+        disp = constrain_first(disp,
+                               P(("pod", "data"), None, None, None),
+                               P("data", None, None, None))
+
+    # native-dtype expert einsums: the model-axis psum of out_e (TP) and
+    # the data-axis psum of weight grads then run in bf16 — half the wire
+    # bytes; the TPU MXU still accumulates each dot in f32 internally.
+    h = jnp.einsum("becd,edf->becf", disp, p["experts"]["gate"])
+    u = jnp.einsum("becd,edf->becf", disp, p["experts"]["up"])
+    h = (L.ACTS[cfg.act](h) * u).astype(x.dtype)
+    out_e = jnp.einsum("becf,efd->becd", h, p["experts"]["down"]).astype(x.dtype)
+
+    # per-slot combine: plain gathers weighted by the router
+    y = jnp.zeros_like(x)
+    for j in range(k):
+        e_j = idx[:, :, j]
+        c_j = jnp.clip(pos[:, :, j], 0, C - 1)
+        o_j = out_e[b_idx, e_j, c_j]                           # [B, T, d]
+        y = y + o_j * (w[:, :, j, None]
+                       * keep[:, :, j, None]).astype(x.dtype)
+
+    if cfg.n_shared_experts > 0:
+        y = y + L.glu_mlp_apply(p["shared"], x, cfg.act)
+    return y, aux
+
+
+def _moe_tokens(p, cfg: MoEConfig, xt):
+    """Dispatch + expert compute + combine for a flat token block [T, d]."""
+    T, d = xt.shape
+    logits = L.dense_apply(p["router"], xt)  # [T, E]
+
+    if cfg.router == "irli_kchoice":
+        w, idx, aux = _route_irli_kchoice(logits, cfg)
+    else:
+        w, idx, aux = _route_topk(logits, cfg)
+
+    E, C = cfg.n_experts, _capacity(cfg, T)
+
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)            # [T, k, E]
+    flat = onehot.reshape(T * cfg.top_k, E)
+    pos_in_e = jnp.cumsum(flat, axis=0) * flat - 1               # [T*k, E]
+    pos = jnp.max(pos_in_e, axis=-1).reshape(T, cfg.top_k)      # [T, k]
+    keep = (pos < C) & (pos >= 0)
+    w = jnp.where(keep, w, 0.0)
+
+    # dispatch: [E, C, d]. Pin the expert axis to "model" (expert parallel)
+    # — the scatter otherwise breaks GSPMD propagation and the dispatch
+    # buffer materializes unsharded ([128,C,d] = 2.5 GiB/device on llama4).
+    disp = jnp.zeros((E, C, d), xt.dtype)
+    e_flat = idx.reshape(-1)
+    c_flat = jnp.clip(pos.reshape(-1), 0, C - 1)
+    tok_flat = jnp.repeat(jnp.arange(T), cfg.top_k)
+    keep_flat = keep.reshape(-1)
+    vals = jnp.where(keep_flat[:, None], xt[tok_flat], 0.0)
+    disp = disp.at[e_flat, c_flat].add(vals)
+    # expert-parallel when E divides the model axis (llama4); otherwise
+    # token-parallel over capacity (mixtral: E=8 < 16 — GSPMD otherwise
+    # replicates the [E,C,d] dispatch, 2.5 GiB/device at prefill scale)
+    # (the token-parallel fallback names "pod" so it applies only on the
+    # multi-pod mesh — single-pod GSPMD already picks a good layout, and
+    # forcing it there regressed 10.8 -> 17.8 GiB; see §Perf log)
+    disp = constrain_first(disp, P("model", None, None),
+                           P(None, ("pod", "data"), None))
+
+    # expert compute: stacked GLU, einsum over expert axis (shardable).
+    # f32 accumulation (MXU-native on TPU; XLA:CPU emulates bf16 via f32
+    # upcasts either way — see EXPERIMENTS.md §Dry-run memory-model note).
+    h = jnp.einsum("ecd,edf->ecf", disp, p["experts"]["gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", disp, p["experts"]["up"],
+                   preferred_element_type=jnp.float32)
+    h = (L.ACTS[cfg.act](h) * u).astype(xt.dtype)
+    h = constrain_first(h, P("model", None, "data"),          # EPxTP (llama4)
+                        P(None, ("pod", "data"), "model"))     # tokenxTP (mixtral, multi-pod)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["experts"]["down"],
+                       preferred_element_type=jnp.float32).astype(xt.dtype)
+
+    # combine: gather each token's expert outputs back, weighted
+    gathered = out_e[e_flat, c_flat]                              # [T*k, d]
+    gathered = gathered * (w.reshape(-1, 1) * keep_flat[:, None]).astype(xt.dtype)
+    y = jax.ops.segment_sum(gathered, tok_flat, num_segments=T)
+
+    if cfg.n_shared_experts > 0:
+        y = y + L.glu_mlp_apply(p["shared"], xt, cfg.act)
+
+    return y, aux

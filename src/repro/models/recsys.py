@@ -1,0 +1,259 @@
+"""RecSys architectures: DLRM (MLPerf), DIEN (AUGRU), BST (behavior-sequence
+transformer), xDeepFM (CIN). Shared skeleton:
+
+    sparse ids --mega-table lookup--> field embeddings
+    dense feats --bottom MLP--------> dense embedding
+    interaction (dot / augru-attn / transformer / CIN)
+    top MLP -> logit
+
+All four share the embedding substrate (models/embedding.py) and emit a single
+CTR logit; ``retrieval_cand`` cells instead score 1M candidate items with a
+two-tower dot (the IRLI-accelerated path lives in core/index.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import embedding as E
+from repro.models.attention import AttnConfig, attn_init, _qkv, _sdpa
+
+
+# ================================================================== DLRM ====
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: tuple[int, ...] = (512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    # Criteo-1TB vocab sizes, MLPerf 40M row cap applied
+    vocab_sizes: tuple[int, ...] = (
+        40_000_000, 39_060, 17_295, 7_424, 20_265, 3, 7_122, 1_543, 63,
+        40_000_000, 3_067_956, 405_282, 10, 2_209, 11_938, 155, 4, 976, 14,
+        40_000_000, 40_000_000, 40_000_000, 590_152, 12_973, 108, 36)
+    param_dtype: str = "float32"
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+
+def dlrm_init(key, cfg: DLRMConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    tables, offsets = E.tables_init(k1, list(cfg.vocab_sizes), cfg.embed_dim, dt)
+    n_int = cfg.n_sparse + 1
+    d_int = n_int * (n_int - 1) // 2 + cfg.embed_dim
+    return {
+        "tables": tables,
+        "bot": L.mlp_init(k2, [cfg.n_dense, *cfg.bot_mlp], dt),
+        "top": L.mlp_init(k3, [d_int, *cfg.top_mlp], dt),
+    }, offsets
+
+
+def dlrm_apply(p, cfg: DLRMConfig, offsets, dense, sparse_ids):
+    """dense [B, n_dense], sparse_ids [B, n_sparse] -> logit [B]."""
+    B = dense.shape[0]
+    x_dense = L.mlp_apply(p["bot"], dense, act="relu", final_act=True)   # [B, D]
+    emb = E.tables_lookup(p["tables"], offsets, sparse_ids)              # [B, F, D]
+    feats = jnp.concatenate([x_dense[:, None, :], emb], axis=1)          # [B, F+1, D]
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats,
+                       preferred_element_type=jnp.float32)               # dot interaction
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju].astype(dense.dtype)                          # [B, F(F+1)/2]
+    z = jnp.concatenate([x_dense, flat], axis=-1)
+    return L.mlp_apply(p["top"], z, act="relu")[:, 0]
+
+
+# ================================================================== DIEN ====
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: tuple[int, ...] = (200, 80)
+    item_vocab: int = 1_000_000
+    cate_vocab: int = 100_000
+    param_dtype: str = "float32"
+
+
+def dien_init(key, cfg: DIENConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    d2 = cfg.embed_dim * 2  # item + category embedding concat
+    return {
+        "item_emb": E.bag_init(k1, cfg.item_vocab, cfg.embed_dim, dt),
+        "cate_emb": E.bag_init(k2, cfg.cate_vocab, cfg.embed_dim, dt),
+        "gru1": L.gru_init(k3, d2, cfg.gru_dim, dt),
+        "augru": L.gru_init(k4, cfg.gru_dim, cfg.gru_dim, dt),
+        "att": L.mlp_init(k5, [cfg.gru_dim + d2, 80, 40, 1], dt),
+        "top": L.mlp_init(k6, [cfg.gru_dim + d2 * 2, *cfg.mlp, 1], dt),
+    }
+
+
+def dien_apply(p, cfg: DIENConfig, hist_items, hist_cates, target_item,
+               target_cate, hist_mask):
+    """hist_* [B,T]; target_* [B]; hist_mask [B,T] -> logit [B]."""
+    B, T = hist_items.shape
+    he = jnp.concatenate([E.bag_lookup(p["item_emb"], hist_items),
+                          E.bag_lookup(p["cate_emb"], hist_cates)], -1)  # [B,T,2d]
+    te = jnp.concatenate([E.bag_lookup(p["item_emb"], target_item),
+                          E.bag_lookup(p["cate_emb"], target_cate)], -1)  # [B,2d]
+
+    h0 = jnp.zeros((B, cfg.gru_dim), he.dtype)
+    seq1, _ = L.gru_scan(p["gru1"], he, h0)                               # interest extraction
+
+    att_in = jnp.concatenate(
+        [seq1, jnp.broadcast_to(te[:, None, :], (B, T, te.shape[-1]))], -1)
+    att = L.mlp_apply(p["att"], att_in, act="relu")[..., 0]               # [B,T]
+    att = jnp.where(hist_mask > 0, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+
+    _, final = L.gru_scan(p["augru"], seq1, h0, cell=L.augru_cell, att=att)
+
+    hist_sum = jnp.sum(he * hist_mask[..., None].astype(he.dtype), axis=1)
+    z = jnp.concatenate([final, te, hist_sum], -1)
+    return L.mlp_apply(p["top"], z, act="relu")[:, 0]
+
+
+# =================================================================== BST =====
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    item_vocab: int = 1_000_000
+    n_other_feats: int = 8
+    other_vocab: int = 100_000
+    param_dtype: str = "float32"
+
+
+def bst_init(key, cfg: BSTConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 5 + cfg.n_blocks)
+    d = cfg.embed_dim
+    acfg = AttnConfig(d_model=d, n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+                      head_dim=max(1, d // cfg.n_heads), use_rope=False)
+    blocks = {}
+    for i in range(cfg.n_blocks):
+        kb1, kb2 = jax.random.split(keys[5 + i])
+        blocks[f"blk{i}"] = {
+            "ln1": L.layernorm_init(d, dt),
+            "attn": attn_init(kb1, acfg, dt),
+            "ln2": L.layernorm_init(d, dt),
+            "ff": L.mlp_init(kb2, [d, 4 * d, d], dt),
+        }
+    seq_total = (cfg.seq_len + 1) * d
+    other_total = cfg.n_other_feats * d
+    return {
+        "item_emb": E.bag_init(keys[0], cfg.item_vocab, d, dt),
+        "pos_emb": E.bag_init(keys[1], cfg.seq_len + 1, d, dt),
+        "other_emb": E.bag_init(keys[2], cfg.other_vocab, d, dt),
+        "blocks": blocks,
+        "top": L.mlp_init(keys[3], [seq_total + other_total, *cfg.mlp, 1], dt),
+    }
+
+
+def bst_apply(p, cfg: BSTConfig, hist_items, target_item, other_ids):
+    """hist_items [B,T], target_item [B], other_ids [B,n_other] -> logit [B]."""
+    B, T = hist_items.shape
+    seq = jnp.concatenate([hist_items, target_item[:, None]], axis=1)   # [B,T+1]
+    x = E.bag_lookup(p["item_emb"], seq)
+    x = x + E.bag_lookup(p["pos_emb"], jnp.arange(T + 1))[None]
+    acfg = AttnConfig(d_model=cfg.embed_dim, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_heads,
+                      head_dim=max(1, cfg.embed_dim // cfg.n_heads),
+                      use_rope=False)
+    pos = jnp.broadcast_to(jnp.arange(T + 1), (B, T + 1))
+    for i in range(cfg.n_blocks):
+        bp = p["blocks"][f"blk{i}"]
+        h = L.layernorm_apply(bp["ln1"], x)
+        # bidirectional attention: BST attends across the whole behavior seq
+        q, k, v = _qkv(bp["attn"], acfg, h, pos)
+        mask = jnp.ones((B, T + 1, T + 1), bool)
+        attn_out = _sdpa(q, k, v, mask, acfg)
+        x = x + L.dense_apply(bp["attn"]["o_proj"], attn_out)
+        h = L.layernorm_apply(bp["ln2"], x)
+        x = x + L.mlp_apply(bp["ff"], h, act="relu")
+    other = E.bag_lookup(p["other_emb"], other_ids).reshape(B, -1)
+    z = jnp.concatenate([x.reshape(B, -1), other], axis=-1)
+    return L.mlp_apply(p["top"], z, act="relu")[:, 0]
+
+
+# ================================================================ xDeepFM ====
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple[int, ...] = (200, 200, 200)
+    mlp: tuple[int, ...] = (400, 400)
+    vocab_per_field: int = 1_000_000
+    param_dtype: str = "float32"
+
+
+def xdeepfm_init(key, cfg: XDeepFMConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    tables, offsets = E.tables_init(
+        k1, [cfg.vocab_per_field] * cfg.n_sparse, cfg.embed_dim, dt)
+    # CIN compression weights: layer k maps [H_{k-1} * m] -> H_k feature maps
+    cin = {}
+    h_prev = cfg.n_sparse
+    kc = jax.random.split(k2, len(cfg.cin_layers))
+    for i, h in enumerate(cfg.cin_layers):
+        cin[f"w{i}"] = (jax.random.normal(kc[i], (h_prev * cfg.n_sparse, h),
+                                          jnp.float32) * 0.01).astype(dt)
+        h_prev = h
+    d_cin = sum(cfg.cin_layers)
+    d_mlp_in = cfg.n_sparse * cfg.embed_dim
+    return {
+        "tables": tables,
+        "cin": cin,
+        "linear": E.bag_init(k3, cfg.vocab_per_field * cfg.n_sparse, 1, dt),
+        "mlp": L.mlp_init(k4, [d_mlp_in, *cfg.mlp, 1], dt),
+        "cin_out": L.dense_init(k5, d_cin, 1, dt),
+    }, offsets
+
+
+def xdeepfm_apply(p, cfg: XDeepFMConfig, offsets, sparse_ids):
+    """sparse_ids [B, n_sparse] -> logit [B]."""
+    B = sparse_ids.shape[0]
+    x0 = E.tables_lookup(p["tables"], offsets, sparse_ids)  # [B, m, D]
+    m, D = cfg.n_sparse, cfg.embed_dim
+
+    # CIN: x_k[b,h,D] = sum_{i,j} W[h,i,j] * (x_{k-1}[b,i,D] ⊙ x0[b,j,D])
+    xs = x0
+    pooled = []
+    for i in range(len(cfg.cin_layers)):
+        z = jnp.einsum("bhd,bmd->bhmd", xs, x0,
+                       preferred_element_type=jnp.float32)   # outer product
+        Hk = xs.shape[1]
+        z = z.reshape(B, Hk * m, D).astype(x0.dtype)
+        xs = jnp.einsum("bid,ih->bhd", z, p["cin"][f"w{i}"],
+                        preferred_element_type=jnp.float32).astype(x0.dtype)
+        pooled.append(jnp.sum(xs, axis=-1))                  # [B, H_k]
+
+    cin_feat = jnp.concatenate(pooled, axis=-1)
+    lin = E.tables_lookup({"mega": p["linear"]}, offsets, sparse_ids)[..., 0].sum(-1)
+    deep = L.mlp_apply(p["mlp"], x0.reshape(B, -1), act="relu")[:, 0]
+    cin_logit = L.dense_apply(p["cin_out"], cin_feat)[:, 0]
+    return lin + deep + cin_logit
+
+
+# ======================================================== retrieval tower ====
+def retrieval_score(query_vec, item_table):
+    """Score one query against all candidates: [d] x [N,d] -> [N] (the
+    brute-force baseline that IRLI's learned index replaces)."""
+    return jnp.einsum("d,nd->n", query_vec, item_table,
+                      preferred_element_type=jnp.float32)

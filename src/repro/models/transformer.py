@@ -1,0 +1,314 @@
+"""LM-family transformer: scan-over-layers stack with GQA attention, GLU MLP
+or MoE, chunked cross-entropy, and a decode step with KV caches.
+
+Scan-over-layers keeps the HLO size O(1) in depth — essential for 512-device
+dry-run compile times. Heterogeneous layer patterns (llama4: 3 chunked-local +
+1 global-NoPE per period) scan over ``n_layers // period`` groups whose body
+unrolls the period.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.models import layers as L
+from repro.models.module import constrain_first
+from repro.models.attention import AttnConfig, attn_init, attend_train, attend_decode, decode_cache_len
+from repro.models.moe import MoEConfig, moe_init, moe_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"                 # geglu => act="gelu", swiglu => "silu"
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    embed_scale: bool = False          # gemma scales embeddings by sqrt(d)
+    logit_cap: float = 0.0
+    # attention pattern: tuple of layer kinds, repeated every len(pattern) layers
+    attn_pattern: tuple[str, ...] = ("full",)
+    window: int = 4096
+    chunk: int = 8192
+    # NoPE on 'full' layers when pattern is heterogeneous (llama4)
+    nope_on_full: bool = False
+    # MoE (None => dense MLP)
+    moe: Optional[MoEConfig] = None
+    # numerics / perf knobs
+    param_dtype: str = "bfloat16"
+    q_chunk: int = 1024
+    # tokens per chunked-CE step: bigger chunks = fewer per-chunk embed-grad
+    # psums in backward (x8 fewer collectives at 8192 vs 1024; logits stay
+    # ~400 MB/device at V=202k — §Perf llama4 iteration 5)
+    ce_chunk: int = 8192
+    remat: bool = True
+    seq_shard_attn: bool = False       # opt-in context-parallel attention
+
+    @property
+    def period(self) -> int:
+        return len(self.attn_pattern)
+
+    def attn_cfg(self, kind_idx: int) -> AttnConfig:
+        kind = self.attn_pattern[kind_idx]
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim, kind=kind,
+            window=self.window, chunk=self.chunk,
+            use_rope=not (self.nope_on_full and kind == "full"),
+            qk_norm=self.qk_norm, rope_theta=self.rope_theta,
+            q_chunk=self.q_chunk, logit_cap=self.logit_cap,
+            # opt-in only: measured WORSE for llama4 train (67 -> 92.5 s
+            # collective: per-layer qkv reshards beat the score psums they
+            # remove — §Perf iteration 4, refuted)
+            seq_shard=(self.seq_shard_attn and self.n_heads % 16 != 0))
+
+    @property
+    def n_params(self) -> int:
+        d, f, V = self.d_model, self.d_ff, self.vocab
+        attn = d * self.n_heads * self.head_dim * 2 + d * self.n_kv_heads * self.head_dim * 2
+        if self.moe is not None:
+            mlp = 3 * d * self.moe.d_ff * self.moe.n_experts + d * self.moe.n_experts
+            mlp += 3 * d * self.moe.d_ff * self.moe.n_shared_experts
+        else:
+            mlp = 3 * d * f
+        per_layer = attn + mlp + 2 * d
+        head = 0 if self.tie_embeddings else V * d
+        return self.n_layers * per_layer + V * d + head + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: only top_k + shared experts)."""
+        if self.moe is None:
+            return self.n_params
+        d = self.d_model
+        attn = d * self.n_heads * self.head_dim * 2 + d * self.n_kv_heads * self.head_dim * 2
+        mlp = 3 * d * self.moe.d_ff * (self.moe.top_k + self.moe.n_shared_experts)
+        mlp += d * self.moe.n_experts
+        per_layer = attn + mlp + 2 * d
+        head = 0 if self.tie_embeddings else self.vocab * d
+        return self.n_layers * per_layer + self.vocab * d + head + d
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------ init ----
+def _layer_init(key, cfg: LMConfig, kind_idx: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": attn_init(k1, cfg.attn_cfg(kind_idx), dt),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(k3, cfg.moe, dt)
+    else:
+        p["mlp"] = L.glu_mlp_init(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def lm_init(key, cfg: LMConfig):
+    """Stacked params: each leaf has leading [n_groups] axis for lax.scan."""
+    n_groups = cfg.n_layers // cfg.period
+    assert n_groups * cfg.period == cfg.n_layers, "n_layers % pattern period != 0"
+    ke, kl, kf = jax.random.split(key, 3)
+
+    def group_init(k):
+        ks = jax.random.split(k, cfg.period)
+        return {f"sub{i}": _layer_init(ks[i], cfg, i) for i in range(cfg.period)}
+
+    group_keys = jax.random.split(kl, n_groups)
+    stacked = jax.vmap(group_init)(group_keys)
+
+    dt = _dtype(cfg)
+    p = {
+        "embed": L.embedding_init(ke, cfg.vocab, cfg.d_model, dt),
+        "layers": stacked,
+        "ln_final": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(kf, cfg.d_model, cfg.vocab, dt, use_bias=False)
+    return p
+
+
+# --------------------------------------------------------------- forward ----
+def _pin_residual(x):
+    """Pin the residual stream to [batch->data, seq/d replicated].
+
+    Without this GSPMD drifts activations to d_model-sharding deep inside the
+    (microbatch x layer x remat) scan nest, turning every MoE dispatch
+    backward into x512 d-axis all-gathers (mixtral §Perf iterations 1-2).
+    No-op when tracing without a mesh (CPU tests)."""
+    return constrain_first(x, PS(("pod", "data"), None, None),
+                           PS("data", None, None))
+
+
+def _group_apply_train(gp, cfg: LMConfig, x, positions):
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.period):
+        lp = gp[f"sub{i}"]
+        x = _pin_residual(x)
+        h = L.rmsnorm_apply(lp["ln_attn"], x)
+        x = x + attend_train(lp["attn"], cfg.attn_cfg(i), h, positions)
+        h = L.rmsnorm_apply(lp["ln_mlp"], x)
+        if cfg.moe is not None:
+            y, aux = moe_apply(lp["moe"], cfg.moe, h)
+            aux_total = aux_total + aux
+        else:
+            y = L.glu_mlp_apply(lp["mlp"], h, cfg.act)
+        x = _pin_residual(x + y)
+    return x, aux_total
+
+
+def lm_backbone(params, cfg: LMConfig, tokens):
+    """tokens [B,S] -> final hidden [B,S,d], aux_loss."""
+    B, S = tokens.shape
+    x = L.embedding_apply(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, gp):
+        x, aux = carry
+        x, aux_g = _group_apply_train(gp, cfg, x, positions)
+        return (x, aux + aux_g), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.rmsnorm_apply(params["ln_final"], x)
+    return x, aux
+
+
+def _logits(params, cfg: LMConfig, h):
+    if cfg.tie_embeddings:
+        out = L.embedding_attend(params["embed"], h)
+    else:
+        out = jnp.einsum("...d,dv->...v", h, params["lm_head"]["kernel"],
+                         preferred_element_type=jnp.float32)
+    if cfg.logit_cap > 0:
+        out = cfg.logit_cap * jnp.tanh(out / cfg.logit_cap)
+    return out  # fp32
+
+
+def chunked_xent(params, cfg: LMConfig, h, labels, mask):
+    """Cross-entropy without materializing [B,S,V] logits.
+
+    Scans over SEQUENCE chunks (keeping the data-sharded batch dim intact —
+    a flat [B*S] reshape would merge the sharded axis and materialize
+    unsharded chunk stacks, measured at 2.5 GiB/device on llama4; §Perf).
+    Each chunk computes logits -> logsumexp -> nll under jax.checkpoint, so
+    peak logits memory is [B, s_chunk, V/model] per device.
+    """
+    B, S, d = h.shape
+    mask = mask.astype(jnp.float32)
+
+    Cs = max(1, min(cfg.ce_chunk // max(B, 1), S))
+    if S % Cs != 0 or S // Cs <= 1:
+        Cs = S
+    n = S // Cs
+
+    def chunk_loss(hc, lc, mc):
+        logits = _logits(params, cfg, hc)                    # [B, Cs, V] fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    if n == 1:
+        total = chunk_loss(h, labels, mask)
+    else:
+        hs = jnp.moveaxis(h.reshape(B, n, Cs, d), 1, 0)          # [n,B,Cs,d]
+        ls = jnp.moveaxis(labels.reshape(B, n, Cs), 1, 0)
+        ms = jnp.moveaxis(mask.reshape(B, n, Cs), 1, 0)
+
+        def body(acc, inp):
+            hc, lc, mc = inp
+            return acc + chunk_loss(hc, lc, mc), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                (hs, ls, ms))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, mask=None):
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    h, aux = lm_backbone(params, cfg, tokens)
+    ce = chunked_xent(params, cfg, h, labels, mask)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------- decode ----
+def init_cache(cfg: LMConfig, batch: int, context_len: int, dtype=None):
+    """KV caches per layer, honoring ring buffers for SWA layers."""
+    dtype = dtype or _dtype(cfg)
+    caches = []
+    for layer in range(cfg.n_layers):
+        acfg = cfg.attn_cfg(layer % cfg.period)
+        Sc = decode_cache_len(acfg, context_len)
+        kv = jnp.zeros((batch, Sc, cfg.n_kv_heads, cfg.head_dim), dtype)
+        caches.append({"k": kv, "v": kv})
+    # stack homogeneous groups for scan: group caches by period index
+    return caches
+
+
+def cache_specs(cfg: LMConfig, batch: int, context_len: int):
+    """ShapeDtypeStructs for the cache (dry-run input_specs)."""
+    dtype = _dtype(cfg)
+    out = []
+    for layer in range(cfg.n_layers):
+        acfg = cfg.attn_cfg(layer % cfg.period)
+        Sc = decode_cache_len(acfg, context_len)
+        sds = jax.ShapeDtypeStruct((batch, Sc, cfg.n_kv_heads, cfg.head_dim), dtype)
+        out.append({"k": sds, "v": sds})
+    return out
+
+
+def lm_decode_step(params, cfg: LMConfig, token, caches, pos):
+    """One decode step. token [B], caches list of per-layer {k,v}, pos [B].
+
+    Returns (logits [B,V], new_caches). Python loop over layers (decode HLO is
+    small per layer; scan would force homogeneous cache shapes which SWA ring
+    buffers break).
+    """
+    B = token.shape[0]
+    x = L.embedding_apply(params["embed"], token)[:, None, :]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    new_caches = []
+    n_groups = cfg.n_layers // cfg.period
+    for layer in range(cfg.n_layers):
+        g, i = divmod(layer, cfg.period)
+        lp = jax.tree.map(lambda v: v[g], params["layers"][f"sub{i}"])
+        acfg = cfg.attn_cfg(i)
+        h = L.rmsnorm_apply(lp["ln_attn"], x)
+        attn_out, ck, cv = attend_decode(lp["attn"], acfg, h,
+                                         caches[layer]["k"], caches[layer]["v"], pos)
+        x = x + attn_out
+        h = L.rmsnorm_apply(lp["ln_mlp"], x)
+        if cfg.moe is not None:
+            y, _ = moe_apply(lp["moe"], cfg.moe, h)
+        else:
+            y = L.glu_mlp_apply(lp["mlp"], h, cfg.act)
+        x = x + y
+        new_caches.append({"k": ck, "v": cv})
+
+    x = L.rmsnorm_apply(params["ln_final"], x)
+    logits = _logits(params, cfg, x)[:, 0, :]
+    return logits, new_caches

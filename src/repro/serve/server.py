@@ -1,0 +1,93 @@
+"""Batched query serving for the IRLI index: admission queue + micro-batcher.
+
+The paper reports per-point latencies at batch sizes 1-10k (Figs. 5-6); real
+deployments amortize the R-net forward over a micro-batch. This server:
+  - collects requests up to ``max_batch`` or ``max_wait_ms``
+  - pads the batch to a bucket size (one jit specialization per bucket)
+  - runs the fused query path and scatters results back to futures
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class IRLIServer:
+    BUCKETS = (1, 8, 32, 128, 512)
+
+    def __init__(self, index, *, m: int = 5, tau: int = 1, k: int = 10,
+                 max_batch: int = 512, max_wait_ms: float = 2.0,
+                 base=None, metric: str = "angular"):
+        self.index = index
+        self.m, self.tau, self.k = m, tau, k
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1000.0
+        self.base = base
+        self.metric = metric
+        self.q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self.stats = {"batches": 0, "requests": 0, "pad_waste": 0}
+        self.thread = threading.Thread(target=self._loop, daemon=True)
+        self.thread.start()
+
+    # ------------------------------------------------------------- client --
+    def submit(self, query: np.ndarray) -> Future:
+        fut: Future = Future()
+        self.q.put((query, fut))
+        return fut
+
+    def search(self, query: np.ndarray):
+        return self.submit(query).result()
+
+    # ------------------------------------------------------------- server --
+    def _bucket(self, n: int) -> int:
+        for b in self.BUCKETS:
+            if n <= b:
+                return b
+        return self.max_batch
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                first = self.q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.time() + self.max_wait
+            while len(batch) < self.max_batch:
+                timeout = deadline - time.time()
+                if timeout <= 0:
+                    break
+                try:
+                    batch.append(self.q.get(timeout=timeout))
+                except queue.Empty:
+                    break
+            queries = np.stack([b[0] for b in batch])
+            n = len(batch)
+            nb = self._bucket(n)
+            if nb > n:  # pad to bucket -> stable jit cache
+                queries = np.concatenate(
+                    [queries, np.repeat(queries[-1:], nb - n, 0)])
+            if self.base is not None:
+                ids, _ = self.index.search(queries, self.base, m=self.m,
+                                           tau=self.tau, k=self.k,
+                                           metric=self.metric)
+                out = np.asarray(ids)
+            else:
+                mask, freq, _ = self.index.query(queries, m=self.m, tau=self.tau)
+                out = np.asarray(mask)
+            self.stats["batches"] += 1
+            self.stats["requests"] += n
+            self.stats["pad_waste"] += nb - n
+            for i, (_, fut) in enumerate(batch):
+                fut.set_result(out[i])
+
+    def close(self):
+        self._stop.set()
+        self.thread.join(timeout=2)

@@ -1,0 +1,52 @@
+"""Elastic re-meshing: restore a checkpoint onto a DIFFERENT device count /
+mesh shape. Checkpoints are stored unsharded (full arrays per leaf), so
+elastic restore = re-device_put with the new mesh's NamedShardings — the
+param sharding RULES are mesh-shape-agnostic (logical axis names), which is
+what makes this a pure data movement with no re-partitioning logic.
+
+Used by tests/test_elastic.py (subprocess with a different fake device count)
+and by launch/train.py --resume-on-new-mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import CheckpointManager
+from repro.models.module import ShardRules, map_with_paths
+
+
+def reshard_tree(tree, mesh, rules: ShardRules):
+    """Host tree (numpy) -> device tree sharded for ``mesh`` per ``rules``.
+    Rules whose axes exceed a leaf's divisibility fall back to replication
+    (downsizing 16->4 devices keeps working)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def place(path, leaf):
+        spec = rules.spec_for(path)
+        ok = True
+        for dim, part in enumerate(spec):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            total = 1
+            for a in axes:
+                if a not in sizes:
+                    ok = False
+                    break
+                total *= sizes[a]
+            if not ok or dim >= leaf.ndim or leaf.shape[dim] % total != 0:
+                ok = False
+                break
+        sharding = NamedSharding(mesh, spec if ok else P())
+        return jax.device_put(leaf, sharding)
+
+    return map_with_paths(place, tree)
+
+
+def elastic_restore(ckpt_dir: str, mesh, rules: ShardRules, step=None):
+    cm = CheckpointManager(ckpt_dir)
+    step = step if step is not None else cm.latest_step()
+    assert step is not None, "no checkpoint to restore"
+    tree, manifest = cm.restore(step)
+    return reshard_tree(tree, mesh, rules), manifest

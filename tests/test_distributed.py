@@ -1,0 +1,76 @@
+"""Distributed IRLI (shard_map) correctness: run in a SUBPROCESS with 8 fake
+host devices, compare the production sharded search against the single-shard
+reference on identical data."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.distributed import make_production_search, shard_search_local
+    from repro.core.network import ScorerConfig, scorer_init
+    from repro.core.partition import hash_init, build_inverted_index
+
+    P_SHARDS = 8
+    L_LOC, D, B, R = 512, 16, 32, 4
+    rng = np.random.default_rng(0)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    scorer = scorer_init(jax.random.PRNGKey(0),
+                         ScorerConfig(d_in=D, d_hidden=32, n_buckets=B, n_reps=R))
+
+    base = jnp.asarray(rng.normal(size=(P_SHARDS, L_LOC, D)), jnp.float32)
+    members = []
+    for s in range(P_SHARDS):
+        a = hash_init(L_LOC, B, R, seed=s)
+        members.append(build_inverted_index(a, B, max_load=2 * L_LOC // B).members)
+    members = jnp.stack(members)
+
+    queries = jnp.asarray(rng.normal(size=(16, D)), jnp.float32)
+
+    search = make_production_search(mesh, m=4, tau=1, k=5)
+    ids, scores = search(scorer, members, base, queries)
+
+    # reference: loop shards on one device, merge manually
+    ref_ids, ref_scores = [], []
+    for s in range(P_SHARDS):
+        i, sc = shard_search_local(scorer, members[s], base[s], queries,
+                                   m=4, tau=1, k=5, topC=1024, q_chunk=16)
+        ref_ids.append(np.where(np.asarray(i) >= 0,
+                                np.asarray(i) + s * L_LOC, -1))
+        ref_scores.append(np.asarray(sc))
+    all_sc = np.concatenate(ref_scores, 1)
+    all_id = np.concatenate(ref_ids, 1)
+    order = np.argsort(-all_sc, 1)[:, :5]
+    want_sc = np.take_along_axis(all_sc, order, 1)
+    want_id = np.take_along_axis(all_id, order, 1)
+
+    got_sc = np.asarray(scores)
+    ok_scores = np.allclose(np.sort(got_sc, 1), np.sort(want_sc, 1),
+                            rtol=1e-4, atol=1e-4)
+    # id sets should match where scores are finite
+    ok_ids = all(set(g[np.isfinite(s)]) == set(w[np.isfinite(ws)])
+                 for g, s, w, ws in zip(np.asarray(ids), got_sc, want_id, want_sc))
+    print(json.dumps({"ok_scores": bool(ok_scores), "ok_ids": bool(ok_ids),
+                      "n_devices": len(jax.devices())}))
+""")
+
+
+def test_production_search_matches_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 8
+    assert rec["ok_scores"], rec
+    assert rec["ok_ids"], rec

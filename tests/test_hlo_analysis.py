@@ -1,0 +1,68 @@
+"""The trip-count-corrected HLO cost model vs hand-computable programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.hlo_analysis import analyze_hlo
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops():
+    a = jnp.zeros((128, 256))
+    b = jnp.zeros((256, 64))
+    txt = _hlo(lambda a, b: a @ b, a, b)
+    rec = analyze_hlo(txt)
+    assert abs(rec["flops"] - 2 * 128 * 256 * 64) / (2 * 128 * 256 * 64) < 0.01
+
+
+def test_scan_multiplies_by_trip_count():
+    """A matmul inside a 10-step scan must count 10x (raw XLA counts 1x)."""
+    a = jnp.zeros((64, 64))
+
+    def f(a):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, a, None, length=10)
+        return out
+
+    rec = analyze_hlo(_hlo(f, a))
+    expect = 10 * 2 * 64 * 64 * 64
+    assert abs(rec["flops"] - expect) / expect < 0.05, rec["flops"]
+
+
+def test_nested_scan_trip_counts():
+    a = jnp.zeros((32, 32))
+
+    def f(a):
+        def inner(c, _):
+            return c @ a, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+
+        out, _ = jax.lax.scan(outer, a, None, length=3)
+        return out
+
+    rec = analyze_hlo(_hlo(f, a))
+    expect = 12 * 2 * 32 ** 3
+    assert abs(rec["flops"] - expect) / expect < 0.1, rec["flops"]
+
+
+def test_hbm_bytes_scale_with_scan():
+    x = jnp.zeros((1024, 1024))
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2.0, None
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        return out
+
+    rec = analyze_hlo(_hlo(f, x))
+    # each iteration touches >= one 4MB buffer; x8 trips
+    assert rec["hbm_bytes"] >= 8 * 1024 * 1024 * 4, rec["hbm_bytes"]

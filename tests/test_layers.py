@@ -1,0 +1,160 @@
+"""Layer-level unit tests: attention variants, MoE routing, norms, RoPE, GRU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.attention import (AttnConfig, attn_init, attend_train,
+                                    attend_decode, _mask)
+from repro.models.moe import MoEConfig, moe_init, moe_apply, _route_irli_kchoice
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    y = L.rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    def dot_at(i, j):
+        qi = L.rope(q, jnp.full((1, 1), i))
+        kj = L.rope(k, jnp.full((1, 1), j))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+def test_rmsnorm_scale():
+    p = L.rmsnorm_init(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 10
+    y = L.rmsnorm_apply(p, x)
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+@pytest.mark.parametrize("kind,window,chunk", [
+    ("full", 0, 0), ("swa", 4, 0), ("chunked", 0, 4)])
+def test_attention_masks(kind, window, chunk):
+    S = 8
+    pos = jnp.arange(S)[None]
+    m = np.asarray(_mask(kind, pos, pos, window, chunk))[0]
+    assert not m[0, 5], "future position attended"
+    assert m[5, 5]
+    if kind == "swa":
+        assert not m[7, 1], "outside window attended"
+        assert m[7, 5]
+    if kind == "chunked":
+        assert not m[5, 3], "cross-chunk attended"
+        assert m[5, 4]
+
+
+def test_gqa_matches_mha_when_kv_equal():
+    """GQA with n_kv == n_heads must equal plain MHA semantics."""
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+                     use_rope=False, q_chunk=1 << 20)
+    p = attn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32))
+    out = attend_train(p, cfg, x)
+    # reference: explicit per-head softmax attention
+    B, S, _ = x.shape
+    q = (x @ p["q_proj"]["kernel"]).reshape(B, S, 4, 8)
+    k = (x @ p["k_proj"]["kernel"]).reshape(B, S, 4, 8)
+    v = (x @ p["v_proj"]["kernel"]).reshape(B, S, 4, 8)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(8.0)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(causal[None, None], scores, -jnp.inf)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+    ref = ref.reshape(B, S, 32) @ p["o_proj"]["kernel"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_q_chunking_is_exact():
+    cfg_full = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                          q_chunk=1 << 20)
+    cfg_chunk = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                           q_chunk=4)
+    p = attn_init(jax.random.PRNGKey(0), cfg_full)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    np.testing.assert_allclose(np.asarray(attend_train(p, cfg_full, x)),
+                               np.asarray(attend_train(p, cfg_chunk, x)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_swa_ring_buffer_decode():
+    """Decode with a ring-buffer SWA cache attends to the right positions."""
+    cfg = AttnConfig(d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+                     kind="swa", window=4, use_rope=False)
+    p = attn_init(jax.random.PRNGKey(0), cfg)
+    B, W = 1, 4
+    ck = jnp.zeros((B, W, 2, 8))
+    cv = jnp.zeros((B, W, 2, 8))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, 8, 16))
+    outs = []
+    for t in range(8):
+        o, ck, cv = attend_decode(p, cfg, xs[:, t:t+1], ck, cv,
+                                  jnp.array([t], jnp.int32))
+        outs.append(o)
+    # reference: full attention restricted to the window, step by step
+    cfg_ref = AttnConfig(d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+                         kind="swa", window=4, use_rope=False, q_chunk=1 << 20)
+    full = attend_train(p, cfg_ref, xs)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = MoEConfig(d_model=16, d_ff=32, n_experts=4, top_k=2,
+                    capacity_factor=2.0)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 16))
+    y, aux = moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.99  # GShard aux >= 1 at balance
+
+
+def test_irli_kchoice_router_balances_load():
+    """The paper's K-choice rule as an MoE router: near-uniform expert load
+    even with skewed logits (vs top-k which collapses)."""
+    T, E = 512, 8
+    # heavily skewed: every token prefers expert 0
+    logits = jnp.concatenate([jnp.full((T, 1), 5.0),
+                              jax.random.normal(jax.random.PRNGKey(0), (T, E - 1)) * 0.1],
+                             axis=1)
+    cfg = MoEConfig(d_model=1, d_ff=1, n_experts=E, top_k=1,
+                    router="irli_kchoice", router_k_choices=4)
+    w, idx, _ = _route_irli_kchoice(logits, cfg)
+    load = np.bincount(np.asarray(idx[:, 0]), minlength=E)
+    assert load.max() <= T // 4 + 8, load  # spread over >= ~4 experts
+    # vs naive argmax: everything on expert 0
+    naive = np.bincount(np.asarray(jnp.argmax(logits, -1)), minlength=E)
+    assert naive.max() == T
+
+
+def test_gru_and_augru():
+    p = L.gru_init(jax.random.PRNGKey(0), 8, 16)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 8))
+    h0 = jnp.zeros((2, 16))
+    ys, h = L.gru_scan(p, xs, h0)
+    assert ys.shape == (2, 5, 16) and h.shape == (2, 16)
+    # AUGRU with zero attention keeps state frozen
+    att0 = jnp.zeros((2, 5))
+    p2 = L.gru_init(jax.random.PRNGKey(2), 16, 16)
+    ys2, h2 = L.gru_scan(p2, ys, h0, cell=L.augru_cell, att=att0)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h0), atol=1e-6)
+
+
+def test_segment_softmax_normalizes():
+    scores = jax.random.normal(jax.random.PRNGKey(0), (10,))
+    seg = jnp.asarray([0, 0, 0, 1, 1, 2, 2, 2, 2, 3])
+    p = L.segment_softmax(scores, seg, 4)
+    sums = jax.ops.segment_sum(p, seg, num_segments=4)
+    np.testing.assert_allclose(np.asarray(sums), 1.0, rtol=1e-5)
