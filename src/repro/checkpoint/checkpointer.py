@@ -103,6 +103,18 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_latest(self, shardings: Any | None = None) -> tuple[int, Any, dict]:
+        """Restore the newest complete checkpoint -> (step, tree, manifest).
+
+        Convenience for serve-time restore of streaming mutable-index state
+        (stream/mutable_index.MutableIRLIIndex.save/load_state), where the
+        caller wants "whatever survived" rather than a specific step."""
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {self.dir}")
+        tree, manifest = self.restore(step, shardings)
+        return step, tree, manifest
+
     def restore(self, step: int, shardings: Any | None = None) -> tuple[Any, dict]:
         path = os.path.join(self.dir, f"step_{step:012d}")
         with open(os.path.join(path, "manifest.json")) as f:

@@ -25,34 +25,45 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.network import scorer_probs
-from repro.core.query import candidate_frequencies_dense
+from repro.core.query import (candidate_frequencies_dense, gather_members,
+                              mask_tombstones, pairwise_sim)
+
+# jax.shard_map landed as a top-level API after 0.4.x; fall back to the
+# experimental module (same semantics, `check_rep` instead of `check_vma`)
+if hasattr(jax, "shard_map"):
+    _shard_map, _SM_KW = jax.shard_map, {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_KW = {"check_rep": False}
 
 
 def local_search(params, members, base_shard, queries, *, m: int, tau: int,
                  k: int, loss_kind: str = "softmax_bce",
-                 metric: str = "angular"):
+                 metric: str = "angular", delta_members=None, tombstone=None):
     """Single-shard IRLI search: queries [Q,d] vs this shard's corpus.
 
     members: [R, B, ML] local inverted index (ids into base_shard)
     base_shard: [L_loc, d]
-    Returns (ids [Q,k] local ids, scores [Q,k]).
+    delta_members [R, B, DL] / tombstone [L_loc] (optional): this shard's
+    streaming delta segments and deletion mask — candidates are unioned from
+    base + delta and tombstoned ids are dropped before counting, so each
+    shard of a distributed deployment can take online updates independently.
+    Returns (ids [Q,k] local ids with -1 where no candidate survived,
+    scores [Q,k]).
     """
     L_loc = base_shard.shape[0]
     probs = scorer_probs(params, queries, loss_kind)        # [R, Q, B]
     _, bidx = jax.lax.top_k(probs, m)                        # [R, Q, m]
-    cands = jax.vmap(lambda mem_r, idx_r: mem_r[idx_r])(members, bidx)
-    cands = jnp.moveaxis(cands, 0, 1).reshape(queries.shape[0], -1)
+    cands = gather_members(members, bidx, delta_members)     # [Q, C]
+    if tombstone is not None:
+        cands = mask_tombstones(cands, tombstone)
     freq = candidate_frequencies_dense(cands, L_loc)         # [Q, L_loc]
     mask = freq >= tau
-    if metric == "angular":
-        sim = jnp.einsum("qd,ld->ql", queries, base_shard,
-                         preferred_element_type=jnp.float32)
-    else:
-        sim = -(jnp.sum(queries ** 2, 1, keepdims=True)
-                - 2 * queries @ base_shard.T
-                + jnp.sum(base_shard ** 2, 1)[None, :])
-    sim = jnp.where(mask, sim, -jnp.inf)
+    sim = jnp.where(mask, pairwise_sim(queries, base_shard, metric), -jnp.inf)
     scores, ids = jax.lax.top_k(sim, k)
+    # never emit a non-candidate (possibly tombstoned) id when fewer than k
+    # candidates survive the frequency filter
+    ids = jnp.where(jnp.isfinite(scores), ids, -1)
     return ids, scores
 
 
@@ -68,10 +79,10 @@ def make_distributed_search(mesh: Mesh, *, m: int, tau: int, k: int,
         ids, scores = local_search(params, members, base, queries, m=m,
                                    tau=tau, k=k, loss_kind=loss_kind,
                                    metric=metric)
-        # globalize ids: offset by shard start
+        # globalize ids: offset by shard start (-1 "no candidate" stays -1)
         axis_index = jax.lax.axis_index(corpus_axes)
         L_loc = base.shape[0]
-        gids = ids + axis_index * L_loc
+        gids = jnp.where(ids >= 0, ids + axis_index * L_loc, -1)
         # merge: all_gather the tiny [Q, k] winners, global top-k
         all_scores = jax.lax.all_gather(scores, corpus_axes, axis=1)  # [Q,P,k]
         all_ids = jax.lax.all_gather(gids, corpus_axes, axis=1)
@@ -83,14 +94,14 @@ def make_distributed_search(mesh: Mesh, *, m: int, tau: int, k: int,
 
     pspec_params = P(None)         # replicated scorer stack is the safe default;
     # per-shard distinct params: leading axis = shard -> P(corpus_axes)
-    return jax.shard_map(
+    return _shard_map(
         sharded, mesh=mesh,
         in_specs=(P(*(corpus_axes + (None,))),   # params leading shard axis
                   P(*(corpus_axes + (None, None, None))),   # members [P,R,B,ML]
                   P(*(corpus_axes + (None, None))),         # base [P,Lloc,d]
                   P()),                                      # queries replicated
         out_specs=(P(), P()),
-        check_vma=False)
+        **_SM_KW)
 
 
 def shard_corpus(base, n_shards: int):
@@ -104,7 +115,8 @@ def shard_corpus(base, n_shards: int):
 def shard_search_local(scorer_params, members, base_shard, queries, *,
                        m: int, tau: int, k: int, topC: int = 1024,
                        q_chunk: int = 512, loss_kind: str = "softmax_bce",
-                       metric: str = "angular"):
+                       metric: str = "angular", delta_members=None,
+                       tombstone=None):
     """100M-scale per-shard search using the sorted-frequency path.
 
     Every chip is one of the paper's "nodes": it owns base_shard [L_loc, d]
@@ -113,6 +125,8 @@ def shard_search_local(scorer_params, members, base_shard, queries, *,
       scorer top-m -> member gather [Q, R*m*ML] -> sort+run-length count
       -> top-C frequent -> gather vectors -> true-distance top-k.
     Queries processed in chunks of q_chunk to bound the [Qc, C, d] gather.
+    Like local_search, optional delta_members/tombstone serve a shard that
+    takes streaming updates.
     """
     from repro.core.network import scorer_logits
     from repro.core.query import sorted_frequency_topC, rerank_gathered
@@ -126,8 +140,9 @@ def shard_search_local(scorer_params, members, base_shard, queries, *,
         # irli_topk kernel is the TPU path that never materializes logits)
         logits = scorer_logits(scorer_params, qs)             # [R, Qc, B]
         _, bidx = jax.lax.top_k(logits, m)
-        cands = jax.vmap(lambda mem, idx: mem[idx])(members, bidx)
-        cands = jnp.moveaxis(cands, 0, 1).reshape(qs.shape[0], -1)
+        cands = gather_members(members, bidx, delta_members)
+        if tombstone is not None:
+            cands = mask_tombstones(cands, tombstone)
         ids, counts = sorted_frequency_topC(cands, topC)
         return rerank_gathered(qs, base_shard, ids, counts, tau, k, metric)
 
@@ -168,8 +183,8 @@ def make_production_search(mesh: Mesh, *, m: int, tau: int, k: int,
         best, pos = jax.lax.top_k(all_scores.reshape(Qn, -1), k)
         return jnp.take_along_axis(all_ids.reshape(Qn, -1), pos, axis=1), best
 
-    return jax.shard_map(
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axes, None, None, None), P(axes, None, None), P()),
         out_specs=(P(), P()),
-        check_vma=False)
+        **_SM_KW)

@@ -23,15 +23,39 @@ def top_buckets(params, queries, m: int, loss_kind: str = "softmax_bce"):
     return jax.lax.top_k(probs, m)
 
 
-def gather_candidates(index: InvertedIndex, bucket_idx: jnp.ndarray):
-    """bucket_idx [R, Q, m] -> candidate ids [Q, R·m·max_load] (pad -1)."""
+def gather_members(members: jnp.ndarray, bucket_idx: jnp.ndarray,
+                   delta_members: jnp.ndarray | None = None):
+    """Gather probed-bucket member lists from raw member matrices.
+
+    members [R, B, ML], bucket_idx [R, Q, m], optional delta_members
+    [R, B, DL] (the streaming delta segments — appended per probed bucket so
+    freshly-inserted items are found immediately).
+    Returns candidate ids [Q, R·m·(ML[+DL])] (pad -1).
+    """
     R, Q, m = bucket_idx.shape
 
     def per_rep(members_r, idx_r):          # [B, ML], [Q, m]
         return members_r[idx_r]             # [Q, m, ML]
 
-    cands = jax.vmap(per_rep)(index.members, bucket_idx)   # [R, Q, m, ML]
+    cands = jax.vmap(per_rep)(members, bucket_idx)         # [R, Q, m, ML]
+    if delta_members is not None:
+        dcands = jax.vmap(per_rep)(delta_members, bucket_idx)  # [R, Q, m, DL]
+        cands = jnp.concatenate([cands, dcands], axis=-1)
     return jnp.moveaxis(cands, 0, 1).reshape(Q, -1)
+
+
+def gather_candidates(index: InvertedIndex, bucket_idx: jnp.ndarray,
+                      delta_members: jnp.ndarray | None = None):
+    """bucket_idx [R, Q, m] -> candidate ids [Q, R·m·max_load] (pad -1)."""
+    return gather_members(index.members, bucket_idx, delta_members)
+
+
+def mask_tombstones(cands: jnp.ndarray, tombstone: jnp.ndarray) -> jnp.ndarray:
+    """Replace tombstoned candidate ids with -1 (pad) BEFORE frequency
+    counting, so deleted items can never survive the frequency filter.
+    cands [Q, C] (pad -1), tombstone [L_cap] bool."""
+    dead = tombstone[jnp.maximum(cands, 0)] & (cands >= 0)
+    return jnp.where(dead, -1, cands)
 
 
 def candidate_frequencies_dense(cands: jnp.ndarray, L: int) -> jnp.ndarray:
@@ -107,6 +131,18 @@ def rerank_gathered(queries, base, cand_ids, cand_counts, tau: int, k: int,
     return jnp.take_along_axis(cand_ids, pos, axis=1), scores
 
 
+def pairwise_sim(queries, base, metric: str = "angular"):
+    """Similarity of every query against every base row: [Q, d]×[L, d] ->
+    [Q, L] fp32 (dot product for angular, negative squared L2 otherwise).
+    The ONE implementation of the metric used by every full-matrix rerank
+    path (frozen, streaming, per-shard) so numerics can't diverge."""
+    if metric == "angular":
+        return jnp.einsum("qd,ld->ql", queries, base,
+                          preferred_element_type=jnp.float32)
+    return -(jnp.sum(queries ** 2, 1, keepdims=True)
+             - 2 * queries @ base.T + jnp.sum(base ** 2, 1)[None, :])
+
+
 def rerank(queries, base, cand_mask, k: int, metric: str = "angular"):
     """True-distance re-rank of surviving candidates.
 
@@ -114,24 +150,40 @@ def rerank(queries, base, cand_mask, k: int, metric: str = "angular"):
     Masked entries get -inf score. (The Pallas distance_topk kernel is the
     fused TPU analogue; this is the jnp path.)
     """
-    if metric == "angular":
-        sim = queries @ base.T
-    else:
-        sim = -(jnp.sum(queries ** 2, 1, keepdims=True)
-                - 2 * queries @ base.T + jnp.sum(base ** 2, 1)[None, :])
-    sim = jnp.where(cand_mask, sim, -jnp.inf)
+    sim = jnp.where(cand_mask, pairwise_sim(queries, base, metric), -jnp.inf)
     _, idx = jax.lax.top_k(sim, k)
     return idx
 
 
-def query_index(params, index: InvertedIndex, queries, *, m: int, tau: int,
-                L: int, loss_kind: str = "softmax_bce"):
-    """Full query path -> (cand_mask [Q, L], freq [Q, L], n_candidates [Q])."""
+def query_members(params, members: jnp.ndarray, queries, *, m: int, tau: int,
+                  L: int, loss_kind: str = "softmax_bce",
+                  delta_members: jnp.ndarray | None = None,
+                  tombstone: jnp.ndarray | None = None):
+    """Full query path over RAW member matrices
+    -> (cand_mask [Q, L], freq [Q, L], n_candidates [Q]).
+
+    The single implementation behind both the frozen path (query_index) and
+    the streaming path (stream/mutable_index): ``delta_members`` unions the
+    live delta segments into the candidate gather and ``tombstone`` masks
+    deleted ids out before counting.
+    """
     _, bidx = top_buckets(params, queries, m, loss_kind)
-    cands = gather_candidates(index, bidx)
+    cands = gather_members(members, bidx, delta_members)
+    if tombstone is not None:
+        cands = mask_tombstones(cands, tombstone)
     freq = candidate_frequencies_dense(cands, L)
     mask = frequency_filter(freq, tau)
     return mask, freq, jnp.sum(mask, axis=1)
+
+
+def query_index(params, index: InvertedIndex, queries, *, m: int, tau: int,
+                L: int, loss_kind: str = "softmax_bce",
+                delta_members: jnp.ndarray | None = None,
+                tombstone: jnp.ndarray | None = None):
+    """query_members over an InvertedIndex's member matrix."""
+    return query_members(params, index.members, queries, m=m, tau=tau, L=L,
+                         loss_kind=loss_kind, delta_members=delta_members,
+                         tombstone=tombstone)
 
 
 def recall_at(cand_mask: jnp.ndarray, gt: jnp.ndarray) -> jnp.ndarray:

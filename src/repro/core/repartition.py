@@ -51,12 +51,22 @@ def affinity_xml(params, x, pair_point, pair_label, n_labels: int,
 
 
 # ------------------------------------------------------ exact power-of-K ----
-def kchoice_exact(topk_idx: jnp.ndarray, B: int, key=None) -> jnp.ndarray:
+def kchoice_exact(topk_idx: jnp.ndarray, B: int, key=None,
+                  load0: jnp.ndarray | None = None,
+                  weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """Sequential least-loaded-of-top-K insertion (Alg. 1 / Thm. 2).
 
     topk_idx: [L, K] per-label top-K affinity buckets (descending affinity).
     Returns assign [L]. Labels are processed in random order when ``key`` is
     given (Thm. 2 assumes uniform random insertion order).
+
+    ``load0`` seeds the bucket loads (default zeros). The streaming insert
+    path (stream/mutable_index.py) passes the LIVE load counters so online
+    placement continues the exact same balanced process the re-partitioner
+    ran at fit time — the paper's "add without retraining" rule.
+    ``weights`` [L] scales each label's load contribution (default 1) —
+    weight 0 makes a row a placement no-op, which lets callers pad batches
+    to a fixed size without biasing the loads.
     """
     L, K = topk_idx.shape
     order = (jax.random.permutation(key, L) if key is not None
@@ -68,9 +78,13 @@ def kchoice_exact(topk_idx: jnp.ndarray, B: int, key=None) -> jnp.ndarray:
         # least-loaded; ties -> higher-affinity (earlier) bucket wins
         j = jnp.argmin(cl + jnp.arange(K, dtype=cl.dtype) * 1e-7)
         b = cand[j]
-        return load.at[b].add(1.0), b
+        w = 1.0 if weights is None else weights[l]
+        return load.at[b].add(w), b
 
-    load0 = jnp.zeros((B,), jnp.float32)
+    if load0 is None:
+        load0 = jnp.zeros((B,), jnp.float32)
+    else:
+        load0 = load0.astype(jnp.float32)
     _, assigned = jax.lax.scan(step, load0, order)
     # un-permute
     out = jnp.zeros((L,), jnp.int32)

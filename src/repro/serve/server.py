@@ -1,21 +1,47 @@
-"""Batched query serving for the IRLI index: admission queue + micro-batcher.
+"""Batched query serving for the IRLI index: admission queue + micro-batcher,
+with online mutation admission for the streaming mutable index.
 
 The paper reports per-point latencies at batch sizes 1-10k (Figs. 5-6); real
 deployments amortize the R-net forward over a micro-batch. This server:
   - collects requests up to ``max_batch`` or ``max_wait_ms``
   - pads the batch to a bucket size (one jit specialization per bucket)
   - runs the fused query path and scatters results back to futures
+  - admits ``insert``/``delete`` mutations through the SAME queue, so
+    updates are serialized with queries in arrival order: a mutation acts as
+    a batch barrier (the in-flight query batch is served against the old
+    snapshot, then the mutation is applied and the snapshot epoch advances).
+    Requires the wrapped index to be a stream.MutableIRLIIndex.
+  - fails all still-pending futures on close() instead of leaving callers
+    blocked forever.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _fulfill(fut: Future, value) -> None:
+    """set_result that tolerates a concurrently cancelled/completed future
+    (client cancel() or the close() drain can race any completion)."""
+    try:
+        if not fut.done():
+            fut.set_result(value)
+    except InvalidStateError:
+        pass
+
+
+def _fail(fut: Future, exc: BaseException) -> None:
+    try:
+        if not fut.done():
+            fut.set_exception(exc)
+    except InvalidStateError:
+        pass
 
 
 class IRLIServer:
@@ -30,20 +56,44 @@ class IRLIServer:
         self.max_wait = max_wait_ms / 1000.0
         self.base = base
         self.metric = metric
+        # mutable (stream.MutableIRLIIndex) indexes carry their own vector
+        # buffer and mutation API; frozen IRLIIndex needs ``base`` to rerank
+        self._mutable = hasattr(index, "insert") and hasattr(index, "delete")
         self.q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
-        self.stats = {"batches": 0, "requests": 0, "pad_waste": 0}
+        self.stats = {"batches": 0, "requests": 0, "pad_waste": 0,
+                      "mutations": 0, "epoch": getattr(index, "epoch", 0)}
         self.thread = threading.Thread(target=self._loop, daemon=True)
         self.thread.start()
 
     # ------------------------------------------------------------- client --
-    def submit(self, query: np.ndarray) -> Future:
+    def _enqueue(self, op: str, payload) -> Future:
         fut: Future = Future()
-        self.q.put((query, fut))
+        if self._stop.is_set():   # closed: fail fast instead of hanging
+            fut.set_exception(RuntimeError("IRLIServer is closed"))
+            return fut
+        self.q.put((op, payload, fut))
+        # close() may have set _stop and drained BETWEEN the check above and
+        # the put — then nobody will ever pop this item, so fail it here
+        # (this path, the drain, and the batcher all use the race-safe
+        # _fulfill/_fail helpers).
+        if self._stop.is_set():
+            _fail(fut, RuntimeError("IRLIServer is closed"))
         return fut
+
+    def submit(self, query: np.ndarray) -> Future:
+        return self._enqueue("query", query)
 
     def search(self, query: np.ndarray):
         return self.submit(query).result()
+
+    def insert(self, vecs: np.ndarray) -> Future:
+        """Enqueue an insert; the future resolves to the assigned ids."""
+        return self._enqueue("insert", vecs)
+
+    def delete(self, ids) -> Future:
+        """Enqueue a delete; the future resolves to #newly deleted."""
+        return self._enqueue("delete", ids)
 
     # ------------------------------------------------------------- server --
     def _bucket(self, n: int) -> int:
@@ -52,42 +102,103 @@ class IRLIServer:
                 return b
         return self.max_batch
 
+    def _apply_mutation(self, op: str, payload, fut: Future):
+        try:
+            if not self._mutable:
+                raise TypeError(
+                    f"{op} requires a MutableIRLIIndex; this server wraps a "
+                    "frozen index")
+            res = (self.index.insert(payload) if op == "insert"
+                   else self.index.delete(payload))
+            self.stats["mutations"] += 1
+            self.stats["epoch"] = self.index.epoch
+            _fulfill(fut, res)                      # caller may have cancelled
+        except Exception as e:                      # surface to the caller
+            _fail(fut, e)
+
+    def _run_batch(self, batch):
+        n = len(batch)
+        nb = self._bucket(n)
+        try:
+            # stack/pad inside the try: one malformed query (wrong shape)
+            # must fail ITS batch, not kill the batcher thread
+            queries = np.stack([b[0] for b in batch])
+            if nb > n:  # pad to bucket -> stable jit cache
+                queries = np.concatenate(
+                    [queries, np.repeat(queries[-1:], nb - n, 0)])
+            if self._mutable:
+                ids, _ = self.index.search(queries, m=self.m, tau=self.tau,
+                                           k=self.k, metric=self.metric)
+                out = np.asarray(ids)
+            elif self.base is not None:
+                ids, _ = self.index.search(queries, self.base, m=self.m,
+                                           tau=self.tau, k=self.k,
+                                           metric=self.metric)
+                out = np.asarray(ids)
+            else:
+                mask, freq, _ = self.index.query(queries, m=self.m,
+                                                 tau=self.tau)
+                out = np.asarray(mask)
+        except Exception as e:
+            for _, fut in batch:
+                _fail(fut, e)
+            return
+        self.stats["batches"] += 1
+        self.stats["requests"] += n
+        self.stats["pad_waste"] += nb - n
+        for i, (_, fut) in enumerate(batch):
+            _fulfill(fut, out[i])                   # cancelled while queued
+
     def _loop(self):
+        pending = None   # mutation popped mid-collection: batch barrier
         while not self._stop.is_set():
-            try:
-                first = self.q.get(timeout=0.1)
-            except queue.Empty:
+            if pending is not None:
+                item, pending = pending, None
+            else:
+                try:
+                    item = self.q.get(timeout=0.1)
+                except queue.Empty:
+                    continue
+            op, payload, fut = item
+            if op != "query":
+                self._apply_mutation(op, payload, fut)
                 continue
-            batch = [first]
+            batch = [(payload, fut)]
             deadline = time.time() + self.max_wait
             while len(batch) < self.max_batch:
                 timeout = deadline - time.time()
                 if timeout <= 0:
                     break
                 try:
-                    batch.append(self.q.get(timeout=timeout))
+                    nxt = self.q.get(timeout=timeout)
                 except queue.Empty:
                     break
-            queries = np.stack([b[0] for b in batch])
-            n = len(batch)
-            nb = self._bucket(n)
-            if nb > n:  # pad to bucket -> stable jit cache
-                queries = np.concatenate(
-                    [queries, np.repeat(queries[-1:], nb - n, 0)])
-            if self.base is not None:
-                ids, _ = self.index.search(queries, self.base, m=self.m,
-                                           tau=self.tau, k=self.k,
-                                           metric=self.metric)
-                out = np.asarray(ids)
-            else:
-                mask, freq, _ = self.index.query(queries, m=self.m, tau=self.tau)
-                out = np.asarray(mask)
-            self.stats["batches"] += 1
-            self.stats["requests"] += n
-            self.stats["pad_waste"] += nb - n
-            for i, (_, fut) in enumerate(batch):
-                fut.set_result(out[i])
+                if nxt[0] != "query":
+                    pending = nxt        # serve the batch first, then mutate
+                    break
+                batch.append((nxt[1], nxt[2]))
+            self._run_batch(batch)
+        # loop exited with a mutation parked: fail it directly — re-queueing
+        # would race with close()'s drain (which may already have finished)
+        if pending is not None:
+            _fail(pending[2],
+                  RuntimeError("IRLIServer closed before this request "
+                               "was served"))
 
     def close(self):
+        """Stop the batcher and FAIL every still-queued request — callers
+        blocked on a future get an immediate error instead of hanging."""
         self._stop.set()
-        self.thread.join(timeout=2)
+        # the batcher may be mid-jit-compile; draining while it still runs
+        # would race completions, so wait until it has actually exited
+        # (daemon thread — a stuck compile still finishes or dies with us)
+        while self.thread.is_alive():
+            self.thread.join(timeout=5)
+        while True:
+            try:
+                _, _, fut = self.q.get_nowait()
+            except queue.Empty:
+                break
+            if fut is not None:
+                _fail(fut, RuntimeError("IRLIServer closed before this "
+                                        "request was served"))

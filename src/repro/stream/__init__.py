@@ -1,0 +1,9 @@
+"""Streaming mutable index: online insert/delete over a fitted IRLI index
+without retraining (paper §3.3), via delta segments + tombstones + exact
+compaction. See docs/streaming.md."""
+from repro.stream.compaction import compact_snapshot
+from repro.stream.delta import DeltaState, delta_append, delta_init
+from repro.stream.mutable_index import MutableIRLIIndex, StreamSnapshot
+
+__all__ = ["MutableIRLIIndex", "StreamSnapshot", "DeltaState",
+           "delta_append", "delta_init", "compact_snapshot"]

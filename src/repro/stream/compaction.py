@@ -1,0 +1,50 @@
+"""Compaction: fold delta segments + tombstones back into a dense base
+member matrix.
+
+The rebuild reuses core/partition.build_inverted_index via a sentinel-bucket
+trick: every dead slot (tombstoned or never issued) is assigned to an extra
+bucket B, the index is built over B+1 buckets, and the sentinel column is
+sliced off. max_load is sized to the max LIVE bucket load (rounded up to a
+multiple of 8 for TPU-friendly shapes), so no live member is ever dropped —
+which is what makes compaction EXACT: the per-bucket live member sets, and
+therefore candidate frequencies and query results, are unchanged.
+
+Compaction changes the member-matrix shape (ML shrinks/grows to fit), which
+re-specializes the jitted query path once per compaction — amortized away by
+how rarely it runs (only on delta overflow or explicit maintenance calls).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import partition as PT
+from repro.stream.delta import delta_init
+
+
+def _round_up(x: int, mult: int = 8) -> int:
+    return ((max(x, 1) + mult - 1) // mult) * mult
+
+
+def compact_snapshot(snap, B: int, pad_multiple: int = 8):
+    """Pure function: StreamSnapshot -> compacted StreamSnapshot.
+
+    Never mutates ``snap`` — the caller swaps the returned snapshot in
+    atomically, so concurrent readers keep a consistent (pre-compaction)
+    view until the swap.
+    """
+    # dead or unused slots -> sentinel bucket B (unused slots already hold B)
+    assign = jnp.where(snap.tombstone[None, :], B, snap.assign)
+    max_live = int(jnp.max(snap.load))
+    max_load = _round_up(max_live, pad_multiple)
+    # build over B+1 buckets; sentinel overflow is dropped harmlessly
+    idx = PT.build_inverted_index(assign, B + 1, max_load)
+    DL = snap.delta.members.shape[2]
+    R = snap.assign.shape[0]
+    return dataclasses.replace(
+        snap,
+        members=idx.members[:, :B],
+        load=idx.load[:, :B].astype(jnp.int32),
+        delta=delta_init(R, B, DL),
+        epoch=snap.epoch + 1)

@@ -1,0 +1,70 @@
+"""Delta segments for the streaming mutable index.
+
+Layout mirrors the frozen inverted index: a dense [R, B, DL] int32 member
+matrix (pad -1) plus a fill counter [R, B]. New items are APPENDED to the
+delta segment of their placed bucket; the query path gathers base + delta
+members with one extra vmap'd index (core/query.gather_members) so the whole
+path stays jit-able with static shapes. Deletions are a [capacity] bool
+tombstone mask applied to the gathered candidates BEFORE frequency counting.
+
+All functions here are pure (functional updates); the snapshot swap in
+mutable_index.py is what makes mutation atomic w.r.t. concurrent readers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaState:
+    """Append-only per-(rep, bucket) segments. members pad = -1."""
+    members: jnp.ndarray   # [R, B, DL] int32
+    fill: jnp.ndarray      # [R, B] int32
+
+
+def delta_init(R: int, B: int, DL: int) -> DeltaState:
+    return DeltaState(members=jnp.full((R, B, DL), -1, jnp.int32),
+                      fill=jnp.zeros((R, B), jnp.int32))
+
+
+def delta_append(delta: DeltaState, buckets: jnp.ndarray,
+                 new_ids: jnp.ndarray):
+    """Append a batch of placed items to their delta segments.
+
+    buckets [R, n]: per-rep placed bucket of each new item (power-of-K
+    output); new_ids [n]: the global ids being inserted.
+    Returns (DeltaState, ok) — ok is False iff ANY item would overflow its
+    segment, in which case the caller must compact first and retry (the
+    returned state silently drops the overflow writes and must be discarded).
+    """
+    R, B, DL = delta.members.shape
+    n = new_ids.shape[0]
+
+    def one_rep(mem_r, fill_r, b_r):
+        # rank of each new item among same-bucket items in THIS batch
+        order = jnp.argsort(b_r, stable=True)
+        sb = b_r[order]
+        counts = jnp.bincount(sb, length=B)
+        starts = jnp.concatenate(
+            [jnp.zeros(1, jnp.int32),
+             jnp.cumsum(counts).astype(jnp.int32)[:-1]])
+        rank = jnp.arange(n, dtype=jnp.int32) - starts[sb]
+        pos = fill_r[sb] + rank
+        # out-of-bounds scatter updates are dropped by JAX — overflow is
+        # detected via ok and the caller discards this state
+        mem_r = mem_r.at[sb, pos].set(new_ids[order])
+        return mem_r, fill_r + counts.astype(jnp.int32), jnp.all(pos < DL)
+
+    mem, fill, ok = jax.vmap(one_rep)(delta.members, delta.fill, buckets)
+    return DeltaState(members=mem, fill=fill), jnp.all(ok)
+
+
+def default_delta_len(capacity: int, n_base: int, B: int,
+                      slack: float = 2.0) -> int:
+    """Per-(rep, bucket) segment length: expected extra load per bucket
+    (power-of-K keeps inserts balanced, Thm. 2) times slack, plus headroom."""
+    expected = max(1, (capacity - n_base + B - 1) // B)
+    return int(slack * expected) + 8

@@ -1,0 +1,329 @@
+"""MutableIRLIIndex — online insert/delete over a fitted IRLI index.
+
+The paper's headline operational property (§3.3): adding or removing an item
+never requires retraining. A new item is scored by the R trained scorers and
+placed into the least-loaded of its top-K buckets — the SAME power-of-K rule
+the re-partitioner ran at fit time (core/repartition.kchoice_exact, seeded
+here with the LIVE load counters) — so the load-balance guarantee (Thm. 2)
+keeps holding as the corpus grows. Deletion tombstones the id.
+
+Architecture (docs/streaming.md):
+  - the queryable state is ONE immutable ``StreamSnapshot`` dataclass; every
+    mutation builds a new snapshot functionally and swaps it in with a single
+    attribute store (atomic under the GIL). Readers grab ``self._snapshot``
+    once per batch — a query never sees a half-applied mutation, and the
+    IRLIServer micro-batcher thread needs no locking against writers.
+  - inserted items go to fixed-capacity delta segments (delta.py) so the
+    query path keeps static shapes and stays jit-able; when a segment would
+    overflow, compaction (compaction.py) folds deltas + tombstones into a
+    rebuilt base member matrix and the insert retries.
+  - vectors live in a preallocated [capacity, d] buffer so re-ranking covers
+    inserted items with no reallocation on the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.index import IRLIIndex
+from repro.core.network import scorer_probs
+from repro.core.repartition import kchoice_exact
+from repro.stream import compaction
+from repro.stream.delta import (DeltaState, default_delta_len, delta_append,
+                                delta_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSnapshot:
+    """The complete queryable state at one epoch. Immutable: mutations build
+    a new snapshot and swap; readers hold a consistent view for free.
+    Scorer params live INSIDE the snapshot so that checkpoint restore is
+    also one atomic store — lock-free readers can never pair new params
+    with an old member matrix or vice versa."""
+    params: dict             # stacked R-rep scorer params
+    members: jnp.ndarray     # [R, B, ML] base member matrix (pad -1)
+    delta: DeltaState        # [R, B, DL] append segments + fill
+    tombstone: jnp.ndarray   # [capacity] bool — True = deleted
+    load: jnp.ndarray        # [R, B] int32 LIVE loads (base + delta - dead)
+    assign: jnp.ndarray      # [R, capacity] int32 bucket per live id (B=unused)
+    vecs: jnp.ndarray        # [capacity, d] float32 vector buffer
+    n_total: int             # high-water mark of issued ids
+    epoch: int               # bumped on every mutation / compaction
+
+
+@partial(jax.jit, static_argnames=("B", "K", "loss_kind"))
+def _score_and_place(params, load, vecs, valid, *, B, K, loss_kind):
+    """Score new vectors with the trained R-net stack and run power-of-K
+    placement per rep against the live loads. -> buckets [R, n_pad].
+
+    ``valid`` [n_pad] masks padding rows (weight 0 in the placement scan),
+    so insert batches can be padded to bucketed sizes — one jit
+    specialization per size bucket instead of one per batch size."""
+    probs = scorer_probs(params, vecs, loss_kind)            # [R, n, B]
+    _, topk = jax.lax.top_k(probs, K)                        # [R, n, K]
+    w = valid.astype(jnp.float32)
+    return jax.vmap(
+        lambda t, l: kchoice_exact(t, B, load0=l, weights=w))(topk, load)
+
+
+@partial(jax.jit, static_argnames=("m", "tau", "L", "loss_kind"))
+def _query_impl(params, members, delta_members, tombstone, queries, *,
+                m, tau, L, loss_kind):
+    return Q.query_members(params, members, queries, m=m, tau=tau, L=L,
+                           loss_kind=loss_kind, delta_members=delta_members,
+                           tombstone=tombstone)
+
+
+@partial(jax.jit, static_argnames=("m", "tau", "k", "L", "metric",
+                                   "loss_kind"))
+def _search_impl(params, members, delta_members, tombstone, vecs, queries, *,
+                 m, tau, k, L, metric, loss_kind):
+    mask, freq, n_cand = _query_impl(params, members, delta_members,
+                                     tombstone, queries, m=m, tau=tau, L=L,
+                                     loss_kind=loss_kind)
+    sim = jnp.where(mask, Q.pairwise_sim(queries, vecs, metric), -jnp.inf)
+    scores, ids = jax.lax.top_k(sim, k)
+    # never emit a masked (deleted / never-candidate) id, even when fewer
+    # than k candidates survive the frequency filter
+    ids = jnp.where(jnp.isfinite(scores), ids, -1)
+    return ids, scores, n_cand
+
+
+class MutableIRLIIndex:
+    """Streaming wrapper around a fitted :class:`IRLIIndex`.
+
+    Single-writer / many-reader: mutations (``insert``/``delete``/
+    ``compact``) serialize on an internal lock; queries are lock-free
+    snapshot readers and may run from any thread (e.g. the IRLIServer
+    micro-batcher) concurrently with mutations.
+    """
+
+    def __init__(self, index: IRLIIndex, base_vecs, capacity: int | None = None,
+                 delta_len: int | None = None):
+        assert index.index is not None, "fit() or build_index() first"
+        self.cfg = index.cfg
+        base_vecs = np.asarray(base_vecs, np.float32)
+        L, d = base_vecs.shape
+        assert L == self.cfg.n_labels, (L, self.cfg.n_labels)
+        B, R = self.cfg.n_buckets, self.cfg.n_reps
+        self.capacity = int(capacity if capacity is not None else 2 * L)
+        assert self.capacity >= L
+        self.n_base = L
+        DL = (delta_len if delta_len is not None
+              else default_delta_len(self.capacity, L, B))
+        vecs = jnp.zeros((self.capacity, d), jnp.float32)
+        vecs = vecs.at[:L].set(base_vecs)
+        assign = jnp.full((R, self.capacity), B, jnp.int32)   # B = unused
+        assign = assign.at[:, :L].set(index.assign)
+        self._snapshot = StreamSnapshot(
+            params=index.params,
+            members=index.index.members,
+            delta=delta_init(R, B, DL),
+            tombstone=jnp.zeros((self.capacity,), bool),
+            load=index.index.load.astype(jnp.int32),
+            assign=assign, vecs=vecs, n_total=L, epoch=0)
+        # A frozen index may TRUNCATE over-full buckets (max_load_slack cap),
+        # leaving members ⊊ assign. The mutable index requires members ≡
+        # assign — delete's load accounting and compaction exactness both
+        # rebuild from assign — so re-derive an untruncated member matrix.
+        # (Also recovers the recall the truncation silently gave up.)
+        if int(jnp.max(index.index.load)) > index.index.max_load:
+            self._snapshot = compaction.compact_snapshot(self._snapshot, B)
+            self._snapshot = dataclasses.replace(self._snapshot, epoch=0)
+        self._mu = threading.RLock()
+
+    # ------------------------------------------------------------ reading --
+    @property
+    def snapshot(self) -> StreamSnapshot:
+        return self._snapshot
+
+    @property
+    def params(self) -> dict:
+        return self._snapshot.params
+
+    @property
+    def epoch(self) -> int:
+        return self._snapshot.epoch
+
+    @property
+    def n_total(self) -> int:
+        return self._snapshot.n_total
+
+    @property
+    def n_live(self) -> int:
+        s = self._snapshot
+        return s.n_total - int(jnp.sum(s.tombstone[:s.n_total]))
+
+    def query(self, queries, m: int = 5, tau: int = 1):
+        """-> (cand_mask [Q, capacity], freq, n_candidates [Q])."""
+        s = self._snapshot
+        return _query_impl(s.params, s.members, s.delta.members,
+                           s.tombstone, jnp.asarray(queries), m=m, tau=tau,
+                           L=self.capacity, loss_kind=self.cfg.loss)
+
+    def search(self, queries, m: int = 5, tau: int = 1, k: int = 10,
+               metric: str = "angular"):
+        """Candidate generation + true-distance re-rank over the LIVE corpus
+        (base + inserted - deleted). -> (ids [Q, k] with -1 pad, n_cand)."""
+        s = self._snapshot
+        ids, _, n_cand = _search_impl(
+            s.params, s.members, s.delta.members, s.tombstone, s.vecs,
+            jnp.asarray(queries), m=m, tau=tau, k=k, L=self.capacity,
+            metric=metric, loss_kind=self.cfg.loss)
+        return ids, n_cand
+
+    # ----------------------------------------------------------- mutation --
+    def insert(self, vecs) -> np.ndarray:
+        """Insert new items; returns their assigned global ids [n].
+
+        Each item is scored by the trained scorers and placed, per rep, into
+        the least loaded of its top-K buckets given the LIVE loads — items
+        are retrievable by the very next query (delta segments are part of
+        the gather). Compacts when a segment would overflow; a batch too
+        large for the (empty) delta segments is split and retried, so
+        placement sequencing is preserved at any batch size.
+        """
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.shape[0] == 0:
+            return np.empty((0,), np.int32)
+        with self._mu:
+            if self._snapshot.n_total + vecs.shape[0] > self.capacity:
+                raise ValueError(
+                    f"capacity exceeded: {self._snapshot.n_total} + "
+                    f"{vecs.shape[0]} > {self.capacity}")
+            return self._insert_locked(vecs)
+
+    def _insert_locked(self, vecs: np.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        n_new = vecs.shape[0]
+        # pad to the next power of two: placement jit-specializes per size
+        # BUCKET, not per arbitrary batch size (padding rows carry weight 0
+        # in the placement scan, so they leave loads and results unbiased)
+        n_pad = 1 << (n_new - 1).bit_length()
+        vj = jnp.asarray(np.concatenate(
+            [vecs, np.zeros((n_pad - n_new, vecs.shape[1]), np.float32)]))
+        valid = jnp.arange(n_pad) < n_new
+        for attempt in range(2):
+            s = self._snapshot
+            buckets = _score_and_place(
+                s.params, s.load.astype(jnp.float32), vj, valid,
+                B=cfg.n_buckets, K=cfg.K,
+                loss_kind=cfg.loss)[:, :n_new]                  # [R, n]
+            new_ids = jnp.arange(s.n_total, s.n_total + n_new, dtype=jnp.int32)
+            new_delta, ok = delta_append(s.delta, buckets, new_ids)
+            if bool(ok):
+                break
+            if attempt == 0:
+                self.compact()            # frees every delta segment
+        else:
+            if n_new == 1:
+                raise RuntimeError(
+                    "delta segments too small to hold a single insert — "
+                    "increase delta_len")
+            half = n_new // 2             # batch > empty-delta capacity
+            return np.concatenate([self._insert_locked(vecs[:half]),
+                                   self._insert_locked(vecs[half:])])
+        dload = jax.vmap(
+            lambda b: jnp.bincount(b, length=cfg.n_buckets))(buckets)
+        self._snapshot = dataclasses.replace(
+            s, delta=new_delta,
+            load=s.load + dload.astype(jnp.int32),
+            assign=s.assign.at[:, new_ids].set(buckets),
+            vecs=s.vecs.at[new_ids].set(vj[:n_new]),
+            n_total=s.n_total + n_new, epoch=s.epoch + 1)
+        return np.asarray(new_ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base or inserted). Returns #newly deleted. Deleted
+        items stop appearing in results immediately; their member-matrix and
+        delta slots are reclaimed at the next compaction. Ids and vector
+        slots are NEVER reused (clients may hold deleted ids), so
+        ``capacity`` bounds lifetime inserts, not the live count."""
+        ids = np.unique(np.asarray(ids, np.int64))
+        with self._mu:
+            s = self._snapshot
+            if ids.size and (ids.min() < 0 or ids.max() >= s.n_total):
+                raise ValueError("delete: id out of range")
+            alive = ~np.asarray(s.tombstone)[ids]
+            live_ids = ids[alive]
+            if live_ids.size == 0:
+                return 0
+            # decrement live loads at each rep's bucket of the dying ids
+            a = np.asarray(s.assign[:, live_ids])                # [R, n]
+            dec = np.stack([np.bincount(a[r], minlength=self.cfg.n_buckets)
+                            for r in range(a.shape[0])])
+            self._snapshot = dataclasses.replace(
+                s,
+                tombstone=s.tombstone.at[jnp.asarray(live_ids)].set(True),
+                load=s.load - jnp.asarray(dec, jnp.int32),
+                epoch=s.epoch + 1)
+            return int(live_ids.size)
+
+    def compact(self) -> None:
+        """Fold delta segments + tombstones into a rebuilt base member
+        matrix (atomic snapshot swap). Query results are EXACTLY preserved:
+        the per-bucket live member sets — hence candidate frequencies, hence
+        re-ranked ids — are identical before and after."""
+        with self._mu:
+            self._snapshot = compaction.compact_snapshot(
+                self._snapshot, self.cfg.n_buckets)
+
+    # ------------------------------------------------------- checkpointing --
+    def state_dict(self, snapshot: StreamSnapshot | None = None) -> dict:
+        """Arrays of the full mutable state, nested for CheckpointManager."""
+        s = snapshot if snapshot is not None else self._snapshot
+        return {
+            "scorer": s.params,
+            "stream": {
+                "members": s.members, "delta_members": s.delta.members,
+                "delta_fill": s.delta.fill, "tombstone": s.tombstone,
+                "load": s.load, "assign": s.assign, "vecs": s.vecs,
+            },
+        }
+
+    def meta(self, snapshot: StreamSnapshot | None = None) -> dict:
+        s = snapshot if snapshot is not None else self._snapshot
+        return {"n_total": s.n_total, "epoch": s.epoch,
+                "capacity": self.capacity, "n_base": self.n_base,
+                "n_buckets": self.cfg.n_buckets, "n_reps": self.cfg.n_reps,
+                "d": self.cfg.d, "loss": self.cfg.loss}
+
+    def save(self, manager, step: int) -> None:
+        """Checkpoint through checkpoint/checkpointer.CheckpointManager.
+        Captures the snapshot ONCE so arrays and meta can't tear against a
+        concurrent mutation."""
+        s = self._snapshot
+        manager.save(step, self.state_dict(s), extra=self.meta(s))
+
+    def load_state(self, tree: dict, extra: dict) -> None:
+        """Restore from a CheckpointManager.restore() result. Fails fast on
+        any config mismatch — restoring arrays shaped for a different
+        B/R/d would corrupt results silently (e.g. compaction drops every
+        member whose bucket id exceeds the new B)."""
+        st = tree["stream"]
+        expect = {"capacity": self.capacity, "n_buckets": self.cfg.n_buckets,
+                  "n_reps": self.cfg.n_reps, "d": self.cfg.d,
+                  "loss": self.cfg.loss}
+        for key, want in expect.items():
+            if key in extra and extra[key] != want:
+                raise ValueError(
+                    f"checkpoint config mismatch: {key}={extra[key]!r}, "
+                    f"this index has {want!r}")
+        with self._mu:
+            self._snapshot = StreamSnapshot(
+                params=jax.tree.map(jnp.asarray, tree["scorer"]),
+                members=jnp.asarray(st["members"], jnp.int32),
+                delta=DeltaState(
+                    members=jnp.asarray(st["delta_members"], jnp.int32),
+                    fill=jnp.asarray(st["delta_fill"], jnp.int32)),
+                tombstone=jnp.asarray(st["tombstone"], bool),
+                load=jnp.asarray(st["load"], jnp.int32),
+                assign=jnp.asarray(st["assign"], jnp.int32),
+                vecs=jnp.asarray(st["vecs"], jnp.float32),
+                n_total=int(extra["n_total"]), epoch=int(extra["epoch"]))

@@ -41,6 +41,66 @@ def test_rerank_gathered_matches_dense():
         np.testing.assert_allclose(np.asarray(scores[q]), best, rtol=1e-5)
 
 
+def test_sorted_and_dense_query_paths_agree():
+    """The 100M-scale path (sorted_frequency_topC + rerank_gathered) must
+    return the same top-k ids as the dense path (candidate_frequencies_dense
+    + rerank) on a shared candidate fixture, for every tau."""
+    rng = np.random.default_rng(3)
+    L, d, B, R, m, k = 200, 16, 16, 2, 4, 5
+    base = jnp.asarray(rng.normal(size=(L, d)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(8, d)), jnp.float32)
+    scfg = ScorerConfig(d_in=d, d_hidden=32, n_buckets=B, n_reps=R)
+    sp = scorer_init(jax.random.PRNGKey(0), scfg)
+    index = build_inverted_index(hash_init(L, B, R, 0), B)
+    _, bidx = Q.top_buckets(sp, queries, m)
+    cands = Q.gather_candidates(index, bidx)        # the SHARED candidates
+
+    freq = Q.candidate_frequencies_dense(cands, L)
+    sids, scnt = Q.sorted_frequency_topC(cands, cands.shape[1])
+    for tau in (1, 2):
+        # dense: [Q, L] count table + full-matrix rerank
+        ids_dense = np.asarray(Q.rerank(queries, base, freq >= tau, k))
+        # sorted: compact top-C frequent ids + gathered rerank
+        ids_sorted, _ = Q.rerank_gathered(queries, base, sids, scnt, tau, k)
+        # rows with >= k survivors have a unique answer (both paths emit
+        # arbitrary ids past the survivor count)
+        full = np.asarray(jnp.sum(freq >= tau, axis=1)) >= k
+        assert full.any(), "fixture produced no comparable rows"
+        np.testing.assert_array_equal(ids_dense[full],
+                                      np.asarray(ids_sorted)[full],
+                                      err_msg=f"tau={tau}")
+
+
+def test_server_close_fails_pending_futures():
+    """close() must drain the queue and fail still-pending requests instead
+    of leaving callers blocked on futures forever."""
+    from repro.serve.server import IRLIServer
+
+    class _NeverIndex:          # query path never reached
+        def query(self, *a, **kw):
+            raise AssertionError("should not be called")
+
+    from concurrent.futures import Future
+
+    server = IRLIServer(_NeverIndex(), max_wait_ms=1.0)
+    # park the batcher, then enqueue as if requests were in flight when
+    # close() started: close() must drain and fail them
+    server._stop.set()
+    server.thread.join(timeout=5)
+    futs = []
+    for _ in range(3):
+        fut: Future = Future()
+        server.q.put(("query", np.zeros(4, np.float32), fut))
+        futs.append(fut)
+    server.close()
+    for f in futs:
+        with pytest.raises(RuntimeError, match="closed"):
+            f.result(timeout=5)
+    # post-close submissions fail fast instead of hanging forever
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(np.zeros(4, np.float32)).result(timeout=5)
+
+
 def test_vocab_head_matches_full_argmax_when_covered():
     """If the true argmax token is in the candidate set, the IRLI vocab head
     must return it (logits over candidates == full logits restricted)."""

@@ -1,0 +1,227 @@
+"""Streaming mutable index: insert-then-query recall, delete exclusion,
+compaction exactness/idempotence, checkpoint roundtrip, server admission."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.index import IRLIIndex, IRLIConfig
+from repro.data.synthetic import clustered_ann, _topk_l2
+from repro.stream import MutableIRLIIndex
+
+
+D, N_INIT, N_NEW = 16, 1000, 150
+M_PROBE = 4   # query probes >= K insertion choices -> self-queries must hit
+
+
+def _fit(base, seed=0):
+    gt = _topk_l2(base, base, k=10, metric="angular")
+    cfg = IRLIConfig(d=D, n_labels=base.shape[0], n_buckets=32, n_reps=2,
+                     d_hidden=32, K=M_PROBE, rounds=1, epochs_per_round=2,
+                     batch_size=256, seed=seed)
+    idx = IRLIIndex(cfg)
+    idx.fit(base, gt, label_vecs=base)
+    return idx
+
+
+@pytest.fixture(scope="module")
+def data():
+    return clustered_ann(n_base=N_INIT + N_NEW, n_queries=50, d=D,
+                         n_clusters=40, seed=0)
+
+
+@pytest.fixture(scope="module")
+def fitted(data):
+    return _fit(data.base[:N_INIT])
+
+
+def _fresh(fitted, data, **kw):
+    return MutableIRLIIndex(fitted, data.base[:N_INIT], **kw)
+
+
+def _self_recall(index, vecs, ids, k=10, **kw):
+    """Fraction of vecs whose own id is retrieved by querying the vec."""
+    got, _ = (index.search(vecs, m=M_PROBE, tau=1, k=k, **kw)
+              if isinstance(index, MutableIRLIIndex)
+              else index.search(vecs, kw["base"], m=M_PROBE, tau=1, k=k))
+    got = np.asarray(got)
+    return float(np.mean([ids[i] in got[i] for i in range(len(ids))]))
+
+
+def test_end_to_end_streaming_demo(data, fitted):
+    """Acceptance: fit small index, insert >=10% new items, delete some
+    originals; inserted items retrievable at recall >= frozen baseline;
+    deleted ids never returned (before AND after compaction); compaction
+    preserves query results exactly."""
+    new_vecs = data.base[N_INIT:]
+    # frozen baseline: index fitted on ALL vectors, self-recall of the same
+    # 150 vectors that the streaming index will receive online
+    frozen_all = _fit(data.base)
+    frozen_ids = np.arange(N_INIT, N_INIT + N_NEW)
+    base_recall = _self_recall(frozen_all, new_vecs, frozen_ids,
+                               base=data.base)
+
+    mut = _fresh(fitted, data)
+    ids = mut.insert(new_vecs)                       # >= 15% of the corpus
+    assert list(ids) == list(range(N_INIT, N_INIT + N_NEW))
+    del_ids = np.arange(0, 100, 2)                   # delete 50 originals
+    assert mut.delete(del_ids) == 50
+    assert mut.n_total == N_INIT + N_NEW
+    assert mut.n_live == N_INIT + N_NEW - 50
+
+    stream_recall = _self_recall(mut, new_vecs, ids)
+    assert stream_recall >= base_recall, (stream_recall, base_recall)
+
+    res_pre, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
+    res_pre = np.asarray(res_pre)
+    assert not np.isin(res_pre, del_ids).any()
+
+    mut.compact()
+    res_post, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
+    np.testing.assert_array_equal(res_pre, np.asarray(res_post))
+    assert not np.isin(np.asarray(res_post), del_ids).any()
+    # inserted items still retrievable post-compaction
+    assert _self_recall(mut, new_vecs, ids) >= base_recall
+
+
+def test_insert_is_immediately_visible(data, fitted):
+    mut = _fresh(fitted, data)
+    one = data.base[N_INIT:N_INIT + 1]
+    (new_id,) = mut.insert(one)
+    ids, _ = mut.search(one, m=M_PROBE, tau=1, k=5)
+    assert new_id in np.asarray(ids)[0]
+
+
+def test_delete_then_query_exclusion(data, fitted):
+    mut = _fresh(fitted, data)
+    # delete the exact nearest neighbor of each query, then query
+    top1 = np.asarray(_topk_l2(data.base[:N_INIT], data.queries, 1,
+                               "angular"))[:, 0]
+    mut.delete(top1)
+    ids, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
+    assert not np.isin(np.asarray(ids), top1).any()
+    # idempotent: deleting again is a no-op
+    assert mut.delete(top1) == 0
+
+
+def test_compaction_idempotent_and_exact(data, fitted):
+    mut = _fresh(fitted, data)
+    mut.insert(data.base[N_INIT:])
+    mut.delete(np.arange(40))
+    ref, _ = mut.search(data.queries, m=M_PROBE, tau=2, k=10)
+    ref = np.asarray(ref)
+    e0 = mut.epoch
+    mut.compact()
+    assert mut.epoch == e0 + 1
+    snap1 = mut.snapshot
+    out1, _ = mut.search(data.queries, m=M_PROBE, tau=2, k=10)
+    np.testing.assert_array_equal(ref, np.asarray(out1))
+    mut.compact()   # compacting a compacted index changes nothing
+    snap2 = mut.snapshot
+    np.testing.assert_array_equal(np.asarray(snap1.members),
+                                  np.asarray(snap2.members))
+    np.testing.assert_array_equal(np.asarray(snap1.load),
+                                  np.asarray(snap2.load))
+    out2, _ = mut.search(data.queries, m=M_PROBE, tau=2, k=10)
+    np.testing.assert_array_equal(ref, np.asarray(out2))
+
+
+def test_load_counters_track_liveness(data, fitted):
+    mut = _fresh(fitted, data)
+    snap = mut.snapshot
+    assert int(jnp.sum(snap.load[0])) == N_INIT
+    mut.insert(data.base[N_INIT:])
+    assert int(jnp.sum(mut.snapshot.load[0])) == N_INIT + N_NEW
+    mut.delete(np.arange(30))
+    assert int(jnp.sum(mut.snapshot.load[0])) == N_INIT + N_NEW - 30
+    mut.compact()
+    assert int(jnp.sum(mut.snapshot.load[0])) == N_INIT + N_NEW - 30
+
+
+def test_delta_overflow_triggers_compaction(data, fitted):
+    mut = _fresh(fitted, data, delta_len=4)   # tiny segments: force overflow
+    e0 = mut.epoch
+    mut.insert(data.base[N_INIT:])            # 150 items >> 32 buckets * 4
+    assert mut.epoch > e0 + 1                 # a compaction happened en route
+    ids = np.arange(N_INIT, N_INIT + N_NEW)
+    assert _self_recall(mut, data.base[N_INIT:], ids) > 0.9
+
+
+def test_capacity_enforced(data, fitted):
+    mut = _fresh(fitted, data, capacity=N_INIT + 10)
+    with pytest.raises(ValueError):
+        mut.insert(data.base[N_INIT:N_INIT + 11])
+
+
+def test_checkpoint_roundtrip(tmp_path, data, fitted):
+    from repro.checkpoint.checkpointer import CheckpointManager
+    mut = _fresh(fitted, data)
+    mut.insert(data.base[N_INIT:])
+    mut.delete(np.arange(25))
+    ref, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
+
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    mut.save(cm, step=7)
+    restored = _fresh(fitted, data)           # fresh state, then load
+    step, tree, manifest = cm.restore_latest()
+    assert step == 7
+    restored.load_state(tree, manifest["extra"])
+    assert restored.n_total == mut.n_total and restored.epoch == mut.epoch
+    out, _ = restored.search(data.queries, m=M_PROBE, tau=1, k=10)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_server_streaming_admission(data, fitted):
+    from repro.serve.server import IRLIServer
+    mut = _fresh(fitted, data)
+    server = IRLIServer(mut, m=M_PROBE, tau=1, k=5, max_batch=16,
+                        max_wait_ms=5.0)
+    try:
+        futs = [server.submit(data.queries[i]) for i in range(10)]
+        ins = server.insert(data.base[N_INIT:N_INIT + 20])
+        more = [server.submit(data.base[N_INIT + j]) for j in range(5)]
+        new_ids = ins.result(timeout=120)
+        assert list(new_ids) == list(range(N_INIT, N_INIT + 20))
+        for f in futs:
+            assert f.result(timeout=120).shape == (5,)
+        # queries submitted AFTER the insert see the inserted items
+        for j, f in enumerate(more):
+            assert N_INIT + j in np.asarray(f.result(timeout=120))
+        deleted = server.delete(np.asarray([N_INIT])).result(timeout=120)
+        assert deleted == 1
+        assert server.stats["mutations"] == 2
+        assert server.stats["epoch"] == mut.epoch
+    finally:
+        server.close()
+
+
+def test_server_rejects_mutation_on_frozen_index(data, fitted):
+    from repro.serve.server import IRLIServer
+    server = IRLIServer(fitted, m=M_PROBE, tau=1, k=5, base=data.base[:N_INIT])
+    try:
+        with pytest.raises(TypeError):
+            server.insert(data.base[N_INIT:N_INIT + 2]).result(timeout=60)
+    finally:
+        server.close()
+
+
+def test_distributed_local_search_honors_delta_and_tombstone(data, fitted):
+    """core/distributed.local_search unions delta members and drops
+    tombstoned ids — the per-shard path of a distributed mutable deployment."""
+    from repro.core.distributed import local_search
+    mut = _fresh(fitted, data)
+    mut.insert(data.base[N_INIT:])
+    mut.delete(np.arange(10))
+    s = mut.snapshot
+    ids, _ = local_search(mut.params, s.members, s.vecs, data.queries[:8],
+                          m=M_PROBE, tau=1, k=10,
+                          delta_members=s.delta.members, tombstone=s.tombstone)
+    ids = np.asarray(ids)
+    assert not np.isin(ids, np.arange(10)).any()
+    # an inserted item is findable through the raw shard path too
+    one = data.base[N_INIT:N_INIT + 1]
+    got, _ = local_search(mut.params, s.members, s.vecs, one, m=M_PROBE,
+                          tau=1, k=5, delta_members=s.delta.members,
+                          tombstone=s.tombstone)
+    assert N_INIT in np.asarray(got)[0]
