@@ -1,0 +1,76 @@
+"""QueryPipeline dense vs compact: recall parity at matched candidate
+budgets, latency, and the memory crossover that motivates routing all
+serving through the compact path (ISSUE 2 / paper §5.3: never materialize
+per-query full-corpus state).
+
+For each corpus size: fit one IRLI index, serve the same queries through
+QueryPipeline(mode="dense") and QueryPipeline(mode="compact", topC=budget),
+and report end-to-end recall10@10 (against true neighbors), mean survivor
+count, per-query latency, and the [Q, L] dense-table bytes the compact path
+avoids. Recall parity: compact == dense wherever the candidate budget covers
+the survivors.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.index import IRLIIndex, IRLIConfig
+from repro.data.synthetic import clustered_ann
+
+N_QUERIES = 200
+
+
+def _recall_of_ids(ids, gt):
+    """End-to-end recall k@k from final top-k id lists (pad -1 never hits)."""
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    k = min(ids.shape[1], gt.shape[1])
+    return float(np.mean([
+        len(set(r[r >= 0]) & set(g[:k])) / k for r, g in zip(ids, gt)]))
+
+
+def run(csv=True):
+    rows = []
+    for L, B_ in ((2000, 64), (8000, 128)):
+        data = clustered_ann(n_base=L, n_queries=N_QUERIES, d=16,
+                             n_clusters=L // 20, seed=0)
+        cfg = IRLIConfig(d=16, n_labels=L, n_buckets=B_, n_reps=4,
+                         d_hidden=64, K=8, rounds=2, epochs_per_round=3,
+                         batch_size=512, lr=2e-3, seed=1)
+        idx = IRLIIndex(cfg)
+        idx.fit(data.train_queries, data.train_gt, label_vecs=data.base)
+        queries = jnp.asarray(data.queries)
+        base = jnp.asarray(data.base)
+
+        # topC=2048 >= the candidate width R·m·max_load at both corpus sizes
+        # -> the matched-budget compact run must reproduce dense recall
+        # exactly; topC=256 shows the truncated-budget tradeoff
+        for mode, topC in (("dense", 2048), ("compact", 2048),
+                           ("compact", 256)):
+            pipe = Q.QueryPipeline(mode=mode, m=4, tau=1, k=10, topC=topC)
+            ids, _, n_cand = pipe.search(idx.params, idx.index.members, base,
+                                         queries)
+            jnp.asarray(ids).block_until_ready()
+            t0 = time.time()
+            for _ in range(3):
+                out = pipe.search(idx.params, idx.index.members, base,
+                                  queries)
+                out[0].block_until_ready()
+            us = (time.time() - t0) / (3 * N_QUERIES) * 1e6
+            rec = _recall_of_ids(ids, data.gt)
+            dense_bytes = 2 * N_QUERIES * L * 4     # count + sim tables
+            tag = mode if mode == "dense" else f"{mode}_C={topC}"
+            rows.append((
+                f"compact_vs_dense/L={L}_{tag}", us,
+                f"recall={rec:.3f};cand={float(n_cand.mean()):.0f};"
+                f"dense_table_bytes={dense_bytes if mode == 'dense' else 0}"))
+
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -39,6 +39,24 @@ def run(csv=True):
         rows.append((f"recall/irli_m={m}", us,
                      f"recall={rec:.3f};cand={float(ncand.mean()):.0f}"))
 
+    # ---- IRLI, compact pipeline (no [Q, L] table) -------------------------
+    # candidate-set recall of the O(C) path at the same probe widths: parity
+    # with the dense rows above whenever topC covers the survivors
+    for m in (1, 2, 4):
+        pipe = Q.QueryPipeline(mode="compact", m=m, tau=1, k=10, topC=1024)
+        t0 = time.time()
+        cands = pipe.candidates(idx.params, idx.index.members,
+                                jnp.asarray(data.queries))
+        cid, cnt = Q.frequency_topC(cands, pipe.topC)
+        us = (time.time() - t0) / len(data.queries) * 1e6
+        keep = np.where((np.asarray(cnt) >= pipe.tau) & (np.asarray(cid) >= 0),
+                        np.asarray(cid), -1)
+        gtn = np.asarray(gt)
+        rec = np.mean([len(set(r[r >= 0]) & set(g)) / len(g)
+                       for r, g in zip(keep, gtn)])
+        rows.append((f"recall/irli_compact_m={m}", us,
+                     f"recall={rec:.3f};cand={float((keep >= 0).sum(1).mean()):.0f}"))
+
     # ---- baselines ---------------------------------------------------------
     L = 8000
 

@@ -12,6 +12,8 @@ import time
 BENCHES = [
     ("load_balance", "benchmarks.bench_load_balance", "paper Table 3"),
     ("recall_candidates", "benchmarks.bench_recall_candidates", "paper Fig 3"),
+    ("compact_vs_dense", "benchmarks.bench_compact_vs_dense",
+     "pipeline recall parity + memory crossover"),
     ("iterations", "benchmarks.bench_iterations", "paper Fig 4 / Table 4"),
     ("xml", "benchmarks.bench_xml", "paper Tables 1-2"),
     ("distributed", "benchmarks.bench_distributed", "paper Figs 5-6"),

@@ -18,15 +18,11 @@ launch/dryrun.py (arch id: the paper's own "irli-deep1b" config).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.network import scorer_probs
-from repro.core.query import (candidate_frequencies_dense, gather_members,
-                              mask_tombstones, pairwise_sim)
+from repro.core.query import QueryPipeline
 
 # jax.shard_map landed as a top-level API after 0.4.x; fall back to the
 # experimental module (same semantics, `check_rep` instead of `check_vma`)
@@ -39,8 +35,10 @@ else:
 
 def local_search(params, members, base_shard, queries, *, m: int, tau: int,
                  k: int, loss_kind: str = "softmax_bce",
-                 metric: str = "angular", delta_members=None, tombstone=None):
-    """Single-shard IRLI search: queries [Q,d] vs this shard's corpus.
+                 metric: str = "angular", delta_members=None, tombstone=None,
+                 mode: str = "auto", topC: int = 1024):
+    """Single-shard IRLI search via QueryPipeline: queries [Q,d] vs this
+    shard's corpus.
 
     members: [R, B, ML] local inverted index (ids into base_shard)
     base_shard: [L_loc, d]
@@ -48,37 +46,37 @@ def local_search(params, members, base_shard, queries, *, m: int, tau: int,
     streaming delta segments and deletion mask — candidates are unioned from
     base + delta and tombstoned ids are dropped before counting, so each
     shard of a distributed deployment can take online updates independently.
+    mode: "dense" | "compact" | "auto" (from L_loc, the query batch, and
+    the dense-table budget). "compact" counts + reranks the per-query
+    top-``topC`` frequent candidates without ever building a [Q, L_loc]
+    table. loss_kind is accepted for API stability but does not affect
+    serving — bucket selection on raw logits matches any monotone loss.
     Returns (ids [Q,k] local ids with -1 where no candidate survived,
     scores [Q,k]).
     """
-    L_loc = base_shard.shape[0]
-    probs = scorer_probs(params, queries, loss_kind)        # [R, Q, B]
-    _, bidx = jax.lax.top_k(probs, m)                        # [R, Q, m]
-    cands = gather_members(members, bidx, delta_members)     # [Q, C]
-    if tombstone is not None:
-        cands = mask_tombstones(cands, tombstone)
-    freq = candidate_frequencies_dense(cands, L_loc)         # [Q, L_loc]
-    mask = freq >= tau
-    sim = jnp.where(mask, pairwise_sim(queries, base_shard, metric), -jnp.inf)
-    scores, ids = jax.lax.top_k(sim, k)
-    # never emit a non-candidate (possibly tombstoned) id when fewer than k
-    # candidates survive the frequency filter
-    ids = jnp.where(jnp.isfinite(scores), ids, -1)
+    del loss_kind
+    pipe = QueryPipeline.make(base_shard.shape[0], mode=mode,
+                              q_batch=queries.shape[0], m=m, tau=tau,
+                              k=k, topC=topC, metric=metric)
+    ids, scores, _ = pipe.search(params, members, base_shard, queries,
+                                 delta_members, tombstone)
     return ids, scores
 
 
 def make_distributed_search(mesh: Mesh, *, m: int, tau: int, k: int,
                             corpus_axes=("data",), loss_kind="softmax_bce",
-                            metric="angular"):
+                            metric="angular", mode: str = "auto",
+                            topC: int = 1024):
     """Build the sharded search fn. Per-shard params (scorers differ per
     corpus shard, as in the paper: 8 nodes × R=4 distinct models)."""
     ax = corpus_axes if len(corpus_axes) > 1 else corpus_axes[0]
 
     def sharded(params, members, base, queries):
-        # shard-local search
+        # shard-local search (compact mode keeps the per-shard work O(topC)
+        # per query ahead of the tiny all_gather merge)
         ids, scores = local_search(params, members, base, queries, m=m,
                                    tau=tau, k=k, loss_kind=loss_kind,
-                                   metric=metric)
+                                   metric=metric, mode=mode, topC=topC)
         # globalize ids: offset by shard start (-1 "no candidate" stays -1)
         axis_index = jax.lax.axis_index(corpus_axes)
         L_loc = base.shape[0]
@@ -117,7 +115,8 @@ def shard_search_local(scorer_params, members, base_shard, queries, *,
                        q_chunk: int = 512, loss_kind: str = "softmax_bce",
                        metric: str = "angular", delta_members=None,
                        tombstone=None):
-    """100M-scale per-shard search using the sorted-frequency path.
+    """100M-scale per-shard search: QueryPipeline(mode="compact") + query
+    chunking.
 
     Every chip is one of the paper's "nodes": it owns base_shard [L_loc, d]
     and a full R-rep inverted index over those L_loc vectors. No [Q, L]
@@ -128,23 +127,15 @@ def shard_search_local(scorer_params, members, base_shard, queries, *,
     Like local_search, optional delta_members/tombstone serve a shard that
     takes streaming updates.
     """
-    from repro.core.network import scorer_logits
-    from repro.core.query import sorted_frequency_topC, rerank_gathered
-
+    del loss_kind                       # serving is loss-agnostic (see above)
+    pipe = QueryPipeline(mode="compact", m=m, tau=tau, k=k, topC=topC,
+                         metric=metric)
     Q = queries.shape[0]
 
     def chunk(qs):
-        # top-m bucket SELECTION only needs logit order — softmax is
-        # row-monotonic, so skip it: saves a full [R, Qc, B] exp+normalize
-        # round-trip through HBM (§Perf irli-serve iteration 1; the Pallas
-        # irli_topk kernel is the TPU path that never materializes logits)
-        logits = scorer_logits(scorer_params, qs)             # [R, Qc, B]
-        _, bidx = jax.lax.top_k(logits, m)
-        cands = gather_members(members, bidx, delta_members)
-        if tombstone is not None:
-            cands = mask_tombstones(cands, tombstone)
-        ids, counts = sorted_frequency_topC(cands, topC)
-        return rerank_gathered(qs, base_shard, ids, counts, tau, k, metric)
+        ids, scores, _ = pipe.search(scorer_params, members, base_shard, qs,
+                                     delta_members, tombstone)
+        return ids, scores
 
     if Q <= q_chunk or Q % q_chunk != 0:
         return chunk(queries)

@@ -47,6 +47,11 @@ class IRLIConfig:
     seed: int = 0
 
 
+@partial(jax.jit, static_argnames=("pipe",))
+def _pipeline_search(pipe: Q.QueryPipeline, params, members, base, queries):
+    return pipe.search(params, members, base, queries)
+
+
 @dataclasses.dataclass
 class FitStats:
     round_idx: list
@@ -163,8 +168,16 @@ class IRLIIndex:
                              loss_kind=self.cfg.loss)
 
     def search(self, queries, base, m: int = 5, tau: int = 1, k: int = 10,
-               metric: str = "angular"):
-        """Candidate generation + true-distance re-rank -> ids [Q, k]."""
-        mask, freq, n_cand = self.query(queries, m, tau)
-        ids = Q.rerank(jnp.asarray(queries), jnp.asarray(base), mask, k, metric)
+               metric: str = "angular", mode: str = "auto", topC: int = 1024):
+        """Candidate generation + true-distance re-rank via QueryPipeline
+        -> (ids [Q, k] with -1 pad, n_candidates [Q]). mode="auto" picks
+        dense/compact from n_labels; "compact" never builds a [Q, L] table."""
+        assert self.index is not None, "fit() or build_index() first"
+        queries = jnp.asarray(queries)
+        pipe = Q.QueryPipeline.make(self.cfg.n_labels, mode=mode,
+                                    q_batch=queries.shape[0], m=m, tau=tau,
+                                    k=k, topC=topC, metric=metric)
+        ids, _, n_cand = _pipeline_search(pipe, self.params,
+                                          self.index.members,
+                                          jnp.asarray(base), queries)
         return ids, n_cand

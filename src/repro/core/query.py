@@ -2,18 +2,31 @@
 inverted-index members -> per-candidate frequency across the m·R probed
 buckets -> threshold filter -> (optional) true-distance re-rank.
 
-Dense-count path (L ≤ ~1e6 per shard): frequency via one-hot segment_sum into
-a [Q, L] count table — TPU-friendly (no sort), memory Q·L.
-Sorted path: per-query sort of the gathered candidate ids + run-length count —
-for very large L; used by the distributed 100M-point configuration where the
-per-node L is sharded.
+Two frequency/rerank backends, unified behind :class:`QueryPipeline`:
+
+dense  — frequency via one-hot segment_sum into a [Q, L] count table and a
+         full [Q, L] similarity matrix for the rerank. TPU-friendly (no
+         sort) but memory O(Q·L): only viable while the per-shard corpus is
+         small (~1e6).
+compact— per-query sort of the gathered candidate ids + run-length count +
+         top-C frequent (``frequency_topC``), then a gathered rerank over
+         just those C rows. O(C) per query, NO [Q, L] table ever exists.
+         This is the 100M-scale path; every serving surface (core/index,
+         core/distributed, serve/server, stream/mutable_index) routes
+         through it via QueryPipeline.
+
+``QueryPipeline.make(L, mode="auto")`` picks the backend from the corpus
+size and a dense-table memory budget. Both backends return identical top-k
+ids at matched candidate budgets (tests/test_query_pipeline.py).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.network import scorer_probs
+from repro.core.network import scorer_logits, scorer_probs
 from repro.core.partition import InvertedIndex
 
 
@@ -77,8 +90,12 @@ def frequency_filter(freq: jnp.ndarray, tau: int):
 def auto_tau(freq: jnp.ndarray, budget: int) -> jnp.ndarray:
     """Beyond-paper: choose per-query tau so ~budget candidates survive.
     freq [Q, L] -> tau [Q] (smallest tau with |{freq>=tau}| <= budget)."""
+    if budget <= 0:
+        # without the guard, budget=0 indexes column -1 via wraparound and
+        # silently returns the MINIMUM frequency (i.e. keeps everything)
+        raise ValueError(f"auto_tau: budget must be >= 1, got {budget}")
     Q, L = freq.shape
-    kth = -jnp.sort(-freq, axis=1)[:, jnp.minimum(budget, L) - 1]
+    kth = -jnp.sort(-freq, axis=1)[:, min(budget, L) - 1]
     return jnp.maximum(kth, 1.0)
 
 
@@ -110,6 +127,18 @@ def sorted_frequency_topC(cands: jnp.ndarray, C: int):
     return jax.vmap(one)(cands)
 
 
+def frequency_topC(cands: jnp.ndarray, C: int):
+    """FrequentOnes over gathered candidates -> compact (ids, counts) [Q, C].
+
+    Dispatches through kernels/freq_topc/ops (the ONE dispatch site): the
+    fused Pallas kernel on TPU — per-query bitonic sort + run-length count
+    + top-C, VMEM-resident — while the packed sort keys fit int32, the jnp
+    sorted path elsewhere. Both produce identical output (count desc, id
+    asc on ties; -1/0 padding past the distinct-candidate count)."""
+    from repro.kernels.freq_topc.ops import frequent_topc
+    return frequent_topc(cands, C=C)
+
+
 def rerank_gathered(queries, base, cand_ids, cand_counts, tau: int, k: int,
                     metric: str = "angular"):
     """Re-rank a COMPACT candidate list: gather base rows by id and score.
@@ -128,7 +157,10 @@ def rerank_gathered(queries, base, cand_ids, cand_counts, tau: int, k: int,
                        axis=-1)
     sim = jnp.where(valid, sim, -jnp.inf)
     scores, pos = jax.lax.top_k(sim, k)
-    return jnp.take_along_axis(cand_ids, pos, axis=1), scores
+    ids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    # a -inf slot means NO candidate survived there — emit -1, never an
+    # arbitrary (possibly tombstoned) id
+    return jnp.where(jnp.isfinite(scores), ids, -1), scores
 
 
 def pairwise_sim(queries, base, metric: str = "angular"):
@@ -146,13 +178,106 @@ def pairwise_sim(queries, base, metric: str = "angular"):
 def rerank(queries, base, cand_mask, k: int, metric: str = "angular"):
     """True-distance re-rank of surviving candidates.
 
-    queries [Q, d], base [L, d], cand_mask [Q, L] -> top-k ids [Q, k].
-    Masked entries get -inf score. (The Pallas distance_topk kernel is the
-    fused TPU analogue; this is the jnp path.)
+    queries [Q, d], base [L, d], cand_mask [Q, L] -> top-k ids [Q, k], with
+    -1 where fewer than k candidates survived (same contract as
+    distributed.local_search — callers must treat -1 as padding). Masked
+    entries get -inf score. (The Pallas distance_topk kernel is the fused
+    TPU analogue; this is the jnp path.)
     """
     sim = jnp.where(cand_mask, pairwise_sim(queries, base, metric), -jnp.inf)
-    _, idx = jax.lax.top_k(sim, k)
-    return idx
+    scores, idx = jax.lax.top_k(sim, k)
+    return jnp.where(jnp.isfinite(scores), idx, -1)
+
+
+# ------------------------------------------------------------ pipeline ------
+DENSE_TABLE_BUDGET_BYTES = 64 << 20   # default cap on the [Q, L] fp32 tables
+
+
+def select_mode(L: int, q_batch: int = 512,
+                budget_bytes: int = DENSE_TABLE_BUDGET_BYTES) -> str:
+    """Pick the frequency/rerank backend from the per-shard corpus size.
+
+    dense materializes two [q_batch, L] fp32 tables (counts + similarities);
+    compact's intermediates are O(q_batch · C0). Returns "dense" while the
+    tables fit the budget, else "compact"."""
+    return "dense" if 2 * q_batch * L * 4 <= budget_bytes else "compact"
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPipeline:
+    """One query-serving configuration: probe width, frequency threshold,
+    rerank depth, and the frequency/rerank backend (``mode``).
+
+    Frozen + hashable so it can be a jit static argument; every serving
+    surface (IRLIIndex.search, distributed.local_search, IRLIServer,
+    MutableIRLIIndex.search) builds one of these and calls :meth:`search`.
+
+    mode="compact" guarantees NO [Q, L] intermediate exists anywhere in the
+    traced computation (asserted by tests/test_query_pipeline.py over the
+    jaxpr) — candidates stay [Q, topC] from frequency counting to the final
+    top-k. n_candidates is therefore capped at ``topC`` in compact mode,
+    while dense counts every survivor.
+    """
+    m: int = 5
+    tau: int = 1
+    k: int = 10
+    mode: str = "compact"          # "dense" | "compact"
+    topC: int = 1024               # compact candidate budget per query
+    metric: str = "angular"
+    # no loss_kind: bucket selection works on raw logits, which give the
+    # same top-m as softmax OR sigmoid probabilities (both monotone) — the
+    # training loss is irrelevant at serve time
+
+    def __post_init__(self):
+        if self.mode not in ("dense", "compact"):
+            raise ValueError(f"unknown pipeline mode {self.mode!r} "
+                             "(use 'dense', 'compact', or make(mode='auto'))")
+
+    @classmethod
+    def make(cls, L: int, *, mode: str = "auto", q_batch: int = 512,
+             budget_bytes: int = DENSE_TABLE_BUDGET_BYTES, **kw):
+        """Build a pipeline, resolving mode="auto" from L and the memory
+        budget (see :func:`select_mode`)."""
+        if mode == "auto":
+            mode = select_mode(L, q_batch, budget_bytes)
+        return cls(mode=mode, **kw)
+
+    # -------------------------------------------------------------- stages --
+    def candidates(self, params, members, queries, delta_members=None,
+                   tombstone=None):
+        """Probe + gather: top-m buckets per rep -> flat candidate ids
+        [Q, R·m·(ML[+DL])] (pad -1), with streaming delta union and
+        tombstone masking. Bucket selection uses raw logits — the top-m set
+        matches scorer_probs under any loss while skipping a full
+        [R, Q, B] normalize."""
+        logits = scorer_logits(params, queries)
+        _, bidx = jax.lax.top_k(logits, self.m)
+        cands = gather_members(members, bidx, delta_members)
+        if tombstone is not None:
+            cands = mask_tombstones(cands, tombstone)
+        return cands
+
+    def search(self, params, members, base, queries, delta_members=None,
+               tombstone=None):
+        """Full serving path -> (ids [Q, k] with -1 pad, scores [Q, k],
+        n_candidates [Q]). base rows are indexed by the member ids (a corpus
+        shard or the streaming vector buffer)."""
+        cands = self.candidates(params, members, queries, delta_members,
+                                tombstone)
+        if self.mode == "compact":
+            cid, cnt = frequency_topC(cands, self.topC)
+            ids, scores = rerank_gathered(queries, base, cid, cnt, self.tau,
+                                          self.k, self.metric)
+            n_cand = jnp.sum((cid >= 0) & (cnt >= self.tau), axis=1)
+            return ids, scores, n_cand
+        L = base.shape[0]
+        freq = candidate_frequencies_dense(cands, L)
+        mask = freq >= self.tau
+        sim = jnp.where(mask, pairwise_sim(queries, base, self.metric),
+                        -jnp.inf)
+        scores, ids = jax.lax.top_k(sim, self.k)
+        ids = jnp.where(jnp.isfinite(scores), ids, -1)
+        return ids, scores, jnp.sum(mask, axis=1)
 
 
 def query_members(params, members: jnp.ndarray, queries, *, m: int, tau: int,
@@ -188,9 +313,13 @@ def query_index(params, index: InvertedIndex, queries, *, m: int, tau: int,
 
 def recall_at(cand_mask: jnp.ndarray, gt: jnp.ndarray) -> jnp.ndarray:
     """recall k@k (paper's R10@10): fraction of gt rows present in the
-    candidate set (candidates ⊇ gt-member ⟺ true-distance rerank keeps it)."""
-    hits = jnp.take_along_axis(cand_mask, gt, axis=1)
-    return jnp.mean(hits.astype(jnp.float32))
+    candidate set (candidates ⊇ gt-member ⟺ true-distance rerank keeps it).
+    Pad-safe: gt entries < 0 (e.g. rerank's "no candidate" -1) are ignored
+    instead of wrapping around to index L-1."""
+    valid = gt >= 0
+    hits = jnp.take_along_axis(cand_mask, jnp.maximum(gt, 0), axis=1)
+    hits = hits.astype(jnp.float32) * valid.astype(jnp.float32)
+    return jnp.sum(hits) / jnp.maximum(jnp.sum(valid), 1)
 
 
 def precision_at(scores_mask, freq, queries, label_vecs, gt_labels, ks=(1, 3, 5)):

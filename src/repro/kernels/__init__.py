@@ -1,3 +1,19 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Version-compat shim: jax has renamed the TPU memory-space API across
+# releases (0.4.x: ``pltpu.TPUMemorySpace``; later: ``pltpu.MemorySpace``).
+# Every kernel in this package imports the resolved names from HERE, so the
+# next rename breaks this one line instead of every kernel file.
+from jax.experimental.pallas import tpu as _pltpu
+
+MemorySpace = getattr(_pltpu, "MemorySpace", None)
+if MemorySpace is None:                      # jax 0.4.x spelling
+    MemorySpace = _pltpu.TPUMemorySpace
+
+ANY = MemorySpace.ANY       # compiler-chosen (HBM for big tables)
+VMEM = _pltpu.VMEM          # fast on-chip vector memory (scratch ctor)
+SMEM = _pltpu.SMEM          # scalar memory (scratch ctor)
+
+__all__ = ["MemorySpace", "ANY", "VMEM", "SMEM"]

@@ -16,8 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import VMEM
 from repro.kernels.irli_topk.irli_topk import _topk_merge
 
 
@@ -82,8 +82,8 @@ def distance_topk(queries, base, mask, *, k: int, tq: int = 64, tl: int = 512,
             jax.ShapeDtypeStruct((Q, k), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((tq, k), jnp.float32),
-            pltpu.VMEM((tq, k), jnp.int32),
+            VMEM((tq, k), jnp.float32),
+            VMEM((tq, k), jnp.int32),
         ],
         interpret=interpret,
     )(queries, base, mask)

@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ANY
 
 
 def _kernel(ids_ref, w_ref, table_ref, out_ref, *, max_per_bag: int):
@@ -59,7 +60,7 @@ def embedding_bag(ids, weights, table, *, tb: int = 128,
         in_specs=[
             pl.BlockSpec((tb, P), lambda i: (i, 0)),
             pl.BlockSpec((tb, P), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=ANY),
         ],
         out_specs=pl.BlockSpec((tb, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, D), table.dtype),

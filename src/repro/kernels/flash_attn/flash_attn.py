@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import VMEM
 
 _NEG = -1e30
 
@@ -92,9 +93,9 @@ def flash_attention(q, k, v, *, tq: int = 128, tk: int = 128,
         out_specs=pl.BlockSpec((1, tq, D), lambda b, qi, ki: (b, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((tq, D), jnp.float32),
-            pltpu.VMEM((tq, 1), jnp.float32),
-            pltpu.VMEM((tq, 1), jnp.float32),
+            VMEM((tq, D), jnp.float32),
+            VMEM((tq, 1), jnp.float32),
+            VMEM((tq, 1), jnp.float32),
         ],
         interpret=interpret,
     )(qf, kf, vf)

@@ -1,0 +1,14 @@
+"""jit'd public wrapper and the ONE dispatch site for FrequentOnes top-C:
+the Pallas kernel on TPU while the packed (count, lane) sort keys fit int32,
+the jnp oracle elsewhere (this container is CPU — interpret mode is used by
+tests only)."""
+import jax
+
+from repro.kernels.freq_topc.freq_topc import MAX_WIDTH, freq_topc
+from repro.kernels.freq_topc.ref import freq_topc_ref
+
+
+def frequent_topc(cands, *, C: int, tq: int = 8):
+    if jax.default_backend() == "tpu" and cands.shape[1] <= MAX_WIDTH:
+        return freq_topc(cands, C=C, tq=tq)
+    return freq_topc_ref(cands, C=C)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused FrequentOnes top-C kernel.
+
+Same contract as core/query.sorted_frequency_topC (the kernel, this oracle,
+and that function agree bit-for-bit): count-descending, ties toward the
+smaller id, -1/0 padding past the distinct-candidate count.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def freq_topc_ref(cands, *, C: int):
+    """cands [Q, C0] int32 (pad -1) -> (ids [Q, C] int32, counts [Q, C] f32)."""
+    C0 = cands.shape[1]
+    C_eff = min(C, C0)
+
+    def one(c):
+        s = jnp.sort(c)                                        # pads (-1) first
+        is_start = jnp.concatenate([jnp.ones(1, bool), s[1:] != s[:-1]])
+        run_id = jnp.cumsum(is_start) - 1
+        counts = jax.ops.segment_sum(jnp.ones_like(s, jnp.float32), run_id,
+                                     num_segments=s.shape[0])
+        score = jnp.where(is_start & (s >= 0), counts[run_id], -1.0)
+        top_cnt, top_pos = jax.lax.top_k(score, C_eff)
+        ids = jnp.where(top_cnt > 0, s[top_pos], -1)
+        if C_eff < C:
+            ids = jnp.concatenate([ids, jnp.full(C - C_eff, -1, ids.dtype)])
+            top_cnt = jnp.concatenate([top_cnt, jnp.zeros(C - C_eff)])
+        return ids.astype(jnp.int32), jnp.maximum(top_cnt, 0.0)
+
+    return jax.vmap(one)(cands)

@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import VMEM
 
 
 def _topk_merge(scores, vals, idxs, m: int):
@@ -105,8 +106,8 @@ def irli_topk(h, w2, b2, *, m: int, tq: int = 128, tb: int = 512,
             jax.ShapeDtypeStruct((Q, m), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((tq, m), jnp.float32),
-            pltpu.VMEM((tq, m), jnp.int32),
+            VMEM((tq, m), jnp.float32),
+            VMEM((tq, m), jnp.int32),
         ],
         interpret=interpret,
     )(h, w2, b2)

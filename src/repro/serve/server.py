@@ -5,7 +5,9 @@ The paper reports per-point latencies at batch sizes 1-10k (Figs. 5-6); real
 deployments amortize the R-net forward over a micro-batch. This server:
   - collects requests up to ``max_batch`` or ``max_wait_ms``
   - pads the batch to a bucket size (one jit specialization per bucket)
-  - runs the fused query path and scatters results back to futures
+  - runs the index's QueryPipeline (``mode``/``topC`` select the dense or
+    compact frequency backend — see docs/query_paths.md) and scatters
+    results back to futures
   - admits ``insert``/``delete`` mutations through the SAME queue, so
     updates are serialized with queries in arrival order: a mutation acts as
     a batch barrier (the in-flight query batch is served against the old
@@ -49,13 +51,18 @@ class IRLIServer:
 
     def __init__(self, index, *, m: int = 5, tau: int = 1, k: int = 10,
                  max_batch: int = 512, max_wait_ms: float = 2.0,
-                 base=None, metric: str = "angular"):
+                 base=None, metric: str = "angular", mode: str = "auto",
+                 topC: int = 1024):
         self.index = index
         self.m, self.tau, self.k = m, tau, k
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.base = base
         self.metric = metric
+        # QueryPipeline backend for every served batch: "auto" resolves
+        # dense/compact from the index's corpus size; "compact" serves with
+        # delta/tombstone union and NO [Q, L] count table (the 100M path)
+        self.mode, self.topC = mode, topC
         # mutable (stream.MutableIRLIIndex) indexes carry their own vector
         # buffer and mutation API; frozen IRLIIndex needs ``base`` to rerank
         self._mutable = hasattr(index, "insert") and hasattr(index, "delete")
@@ -128,12 +135,14 @@ class IRLIServer:
                     [queries, np.repeat(queries[-1:], nb - n, 0)])
             if self._mutable:
                 ids, _ = self.index.search(queries, m=self.m, tau=self.tau,
-                                           k=self.k, metric=self.metric)
+                                           k=self.k, metric=self.metric,
+                                           mode=self.mode, topC=self.topC)
                 out = np.asarray(ids)
             elif self.base is not None:
                 ids, _ = self.index.search(queries, self.base, m=self.m,
                                            tau=self.tau, k=self.k,
-                                           metric=self.metric)
+                                           metric=self.metric,
+                                           mode=self.mode, topC=self.topC)
                 out = np.asarray(ids)
             else:
                 mask, freq, _ = self.index.query(queries, m=self.m,

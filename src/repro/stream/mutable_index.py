@@ -80,19 +80,15 @@ def _query_impl(params, members, delta_members, tombstone, queries, *,
                            tombstone=tombstone)
 
 
-@partial(jax.jit, static_argnames=("m", "tau", "k", "L", "metric",
-                                   "loss_kind"))
-def _search_impl(params, members, delta_members, tombstone, vecs, queries, *,
-                 m, tau, k, L, metric, loss_kind):
-    mask, freq, n_cand = _query_impl(params, members, delta_members,
-                                     tombstone, queries, m=m, tau=tau, L=L,
-                                     loss_kind=loss_kind)
-    sim = jnp.where(mask, Q.pairwise_sim(queries, vecs, metric), -jnp.inf)
-    scores, ids = jax.lax.top_k(sim, k)
-    # never emit a masked (deleted / never-candidate) id, even when fewer
-    # than k candidates survive the frequency filter
-    ids = jnp.where(jnp.isfinite(scores), ids, -1)
-    return ids, scores, n_cand
+@partial(jax.jit, static_argnames=("pipe",))
+def _search_impl(pipe: Q.QueryPipeline, params, members, delta_members,
+                 tombstone, vecs, queries):
+    """QueryPipeline.search over a snapshot's raw arrays. The pipeline
+    handles delta union, tombstone masking, and -1 padding for slots with
+    no surviving candidate; compact mode never builds a [Q, capacity]
+    count/similarity table."""
+    return pipe.search(params, members, vecs, queries, delta_members,
+                       tombstone)
 
 
 class MutableIRLIIndex:
@@ -168,14 +164,21 @@ class MutableIRLIIndex:
                            L=self.capacity, loss_kind=self.cfg.loss)
 
     def search(self, queries, m: int = 5, tau: int = 1, k: int = 10,
-               metric: str = "angular"):
+               metric: str = "angular", mode: str = "auto",
+               topC: int = 1024):
         """Candidate generation + true-distance re-rank over the LIVE corpus
-        (base + inserted - deleted). -> (ids [Q, k] with -1 pad, n_cand)."""
+        (base + inserted - deleted). -> (ids [Q, k] with -1 pad, n_cand).
+        mode="auto" picks dense/compact from the vector-buffer capacity;
+        "compact" serves with no [Q, capacity] intermediate (n_cand is then
+        capped at topC)."""
         s = self._snapshot
+        queries = jnp.asarray(queries)
+        pipe = Q.QueryPipeline.make(self.capacity, mode=mode,
+                                    q_batch=queries.shape[0], m=m, tau=tau,
+                                    k=k, topC=topC, metric=metric)
         ids, _, n_cand = _search_impl(
-            s.params, s.members, s.delta.members, s.tombstone, s.vecs,
-            jnp.asarray(queries), m=m, tau=tau, k=k, L=self.capacity,
-            metric=metric, loss_kind=self.cfg.loss)
+            pipe, s.params, s.members, s.delta.members, s.tombstone, s.vecs,
+            queries)
         return ids, n_cand
 
     # ----------------------------------------------------------- mutation --

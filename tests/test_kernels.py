@@ -88,6 +88,42 @@ def test_bce_matches_autodiff():
                                rtol=1e-4, atol=1e-6)
 
 
+# ------------------------------------------------------------ freq_topc ----
+from repro.kernels.freq_topc.freq_topc import freq_topc
+from repro.kernels.freq_topc.ref import freq_topc_ref
+
+
+@pytest.mark.parametrize("Q,C0,V,C,tq", [
+    (8, 96, 40, 16, 4),      # fewer values than slots: heavy duplication
+    (7, 120, 500, 64, 4),    # mostly-distinct + row padding (7 % 4 != 0)
+    (4, 100, 30, 160, 2),    # C > C0: output right-padded
+])
+def test_freq_topc_matches_ref_exactly(Q, C0, V, C, tq):
+    rng = np.random.default_rng(Q + C0)
+    cands = rng.integers(-1, V, (Q, C0)).astype(np.int32)
+    cands[0, : C0 // 2] = -1                     # heavily padded row
+    cands[-1] = -1                               # zero-candidate row
+    cj = jnp.asarray(cands)
+    ids_k, cnt_k = freq_topc(cj, C=C, tq=tq, interpret=True)
+    ids_r, cnt_r = freq_topc_ref(cj, C=C)
+    # deterministic ordering contract (count desc, id asc) -> exact equality
+    np.testing.assert_array_equal(np.asarray(ids_k), np.asarray(ids_r))
+    np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
+    assert (np.asarray(ids_k)[-1] == -1).all()   # empty row stays empty
+
+
+def test_freq_topc_ref_matches_core_sorted_path():
+    """The kernel's oracle and core/query.sorted_frequency_topC are the SAME
+    contract — the compact QueryPipeline may take either."""
+    from repro.core.query import sorted_frequency_topC
+    rng = np.random.default_rng(0)
+    cands = jnp.asarray(rng.integers(-1, 60, (6, 160)).astype(np.int32))
+    ids_r, cnt_r = freq_topc_ref(cands, C=32)
+    ids_s, cnt_s = sorted_frequency_topC(cands, 32)
+    np.testing.assert_array_equal(np.asarray(ids_r), np.asarray(ids_s))
+    np.testing.assert_array_equal(np.asarray(cnt_r), np.asarray(cnt_s))
+
+
 # ------------------------------------------------------- flash attention ----
 from repro.kernels.flash_attn.flash_attn import flash_attention
 from repro.kernels.flash_attn.ref import flash_attention_ref

@@ -1,0 +1,243 @@
+"""QueryPipeline: dense-vs-compact equivalence across the frozen, streaming
+(delta + tombstone), and per-shard serving paths; the compact-mode guarantee
+that NO [Q, L] intermediate is ever materialized (checked over the jaxpr);
+and the satellite fixes (auto_tau budget guard, rerank -1 padding, pad-safe
+recall_at)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.distributed import local_search
+from repro.core.index import IRLIIndex, IRLIConfig
+from repro.stream import MutableIRLIIndex
+
+D, B, R, M_PROBE, K_TOP = 16, 16, 2, 4, 5
+
+
+def _untrained_index(L, seed=0, n_buckets=B):
+    """Scorer params + hash partition + inverted index, no training — the
+    pipelines must agree for ANY params, so skip the slow fit."""
+    cfg = IRLIConfig(d=D, n_labels=L, n_buckets=n_buckets, n_reps=R,
+                     d_hidden=32, K=M_PROBE, seed=seed)
+    idx = IRLIIndex(cfg)
+    idx.build_index()
+    return idx
+
+
+def _pipelines(**kw):
+    common = dict(m=M_PROBE, tau=kw.pop("tau", 1), k=K_TOP,
+                  topC=kw.pop("topC", 1024), **kw)
+    return (Q.QueryPipeline(mode="dense", **common),
+            Q.QueryPipeline(mode="compact", **common))
+
+
+def _assert_same_results(ids_d, ids_c, full_rows):
+    """Rows with >= k survivors have a unique answer -> exact equality;
+    partial rows must agree on the surviving id SET and the -1 padding."""
+    ids_d, ids_c = np.asarray(ids_d), np.asarray(ids_c)
+    full_rows = np.asarray(full_rows)
+    assert full_rows.any(), "fixture produced no fully-served rows"
+    np.testing.assert_array_equal(ids_d[full_rows], ids_c[full_rows])
+    for a, b in zip(ids_d[~full_rows], ids_c[~full_rows]):
+        assert set(a[a >= 0]) == set(b[b >= 0])
+        assert (a >= 0).sum() == (b >= 0).sum()
+
+
+# --------------------------------------------------------------- satellites --
+def test_auto_tau_rejects_nonpositive_budget():
+    freq = jnp.ones((2, 8))
+    for budget in (0, -3):
+        with pytest.raises(ValueError, match="budget"):
+            Q.auto_tau(freq, budget=budget)
+
+
+def test_rerank_emits_minus_one_for_empty_rows():
+    rng = np.random.default_rng(0)
+    base = jnp.asarray(rng.normal(size=(32, D)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(3, D)), jnp.float32)
+    mask = np.ones((3, 32), bool)
+    mask[1] = False                      # no surviving candidate at all
+    mask[2, 3:] = False                  # fewer survivors than k
+    ids = np.asarray(Q.rerank(queries, base, jnp.asarray(mask), k=K_TOP))
+    assert (ids[1] == -1).all()
+    assert (ids[2, :3] >= 0).all() and (ids[2, 3:] == -1).all()
+    # compact analogue: all counts below tau -> all -1
+    cid = jnp.asarray(rng.integers(0, 32, (3, 8)), jnp.int32)
+    gids, _ = Q.rerank_gathered(queries, base, cid, jnp.zeros((3, 8)),
+                                tau=1, k=K_TOP)
+    assert (np.asarray(gids) == -1).all()
+
+
+def test_recall_at_is_pad_safe():
+    mask = jnp.zeros((2, 10), bool).at[:, 9].set(True)
+    gt = jnp.asarray([[9, -1], [3, -1]], jnp.int32)
+    # -1 must be IGNORED, not wrap to column 9 (which would count as a hit)
+    assert float(Q.recall_at(mask, gt)) == pytest.approx(0.5)
+    assert float(Q.recall_at(mask, jnp.full((2, 2), -1, jnp.int32))) == 0.0
+
+
+def test_pipeline_mode_selection():
+    assert Q.select_mode(1_000) == "dense"
+    assert Q.select_mode(100_000_000) == "compact"
+    assert Q.QueryPipeline.make(1_000).mode == "dense"
+    assert Q.QueryPipeline.make(100_000_000).mode == "compact"
+    assert Q.QueryPipeline.make(1_000, mode="compact").mode == "compact"
+    # the dense-table budget is per BATCH: a huge batch against a mid-size
+    # corpus must flip to compact even though L alone would pick dense
+    assert Q.QueryPipeline.make(16_000, q_batch=512).mode == "dense"
+    assert Q.QueryPipeline.make(16_000, q_batch=500_000).mode == "compact"
+    with pytest.raises(ValueError, match="mode"):
+        Q.QueryPipeline(mode="sparse")
+
+
+# -------------------------------------------------- dense/compact agreement --
+@pytest.mark.parametrize("tau", [1, 2])
+def test_equivalence_frozen(tau):
+    L = 500
+    rng = np.random.default_rng(1)
+    idx = _untrained_index(L)
+    base = jnp.asarray(rng.normal(size=(L, D)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(12, D)), jnp.float32)
+    dense, compact = _pipelines(tau=tau)
+    ids_d, _, nc_d = dense.search(idx.params, idx.index.members, base, queries)
+    ids_c, _, nc_c = compact.search(idx.params, idx.index.members, base,
+                                    queries)
+    # topC exceeds the candidate width -> identical survivor counts too
+    np.testing.assert_array_equal(np.asarray(nc_d), np.asarray(nc_c))
+    _assert_same_results(ids_d, ids_c, np.asarray(nc_d) >= K_TOP)
+
+
+def _mutated_index(L=400, n_new=60, seed=2):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(L, D)).astype(np.float32)
+    mut = MutableIRLIIndex(_untrained_index(L, seed=seed), base)
+    mut.insert(rng.normal(size=(n_new, D)).astype(np.float32))
+    mut.delete(rng.choice(L, 40, replace=False))
+    return mut, rng.normal(size=(10, D)).astype(np.float32)
+
+
+@pytest.mark.parametrize("tau", [1, 2])
+def test_equivalence_streaming(tau):
+    """Streaming path: delta segments unioned, tombstones dropped — both
+    modes, via MutableIRLIIndex.search."""
+    mut, queries = _mutated_index()
+    ids_d, nc_d = mut.search(queries, m=M_PROBE, tau=tau, k=K_TOP,
+                             mode="dense")
+    ids_c, nc_c = mut.search(queries, m=M_PROBE, tau=tau, k=K_TOP,
+                             mode="compact", topC=1024)
+    np.testing.assert_array_equal(np.asarray(nc_d), np.asarray(nc_c))
+    _assert_same_results(ids_d, ids_c, np.asarray(nc_d) >= K_TOP)
+    dead = np.asarray(mut.snapshot.tombstone).nonzero()[0]
+    assert not np.isin(np.asarray(ids_c), dead).any()
+
+
+def test_equivalence_per_shard():
+    """distributed.local_search (the per-shard path of the sharded deploy)
+    with live delta + tombstone state."""
+    mut, queries = _mutated_index(seed=3)
+    s = mut.snapshot
+    kw = dict(m=M_PROBE, tau=1, k=K_TOP, delta_members=s.delta.members,
+              tombstone=s.tombstone)
+    ids_d, sc_d = local_search(mut.params, s.members, s.vecs, queries,
+                               mode="dense", **kw)
+    ids_c, sc_c = local_search(mut.params, s.members, s.vecs, queries,
+                               mode="compact", topC=1024, **kw)
+    full = np.isfinite(np.asarray(sc_d)).all(axis=1)
+    _assert_same_results(ids_d, ids_c, full)
+    np.testing.assert_allclose(np.asarray(sc_d)[full], np.asarray(sc_c)[full],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_server_serves_compact_pipeline():
+    """IRLIServer(mode="compact") end to end over a mutable index: batched
+    results equal the direct compact search."""
+    from repro.serve.server import IRLIServer
+    mut, queries = _mutated_index(seed=4)
+    want, _ = mut.search(queries, m=M_PROBE, tau=1, k=K_TOP, mode="compact")
+    server = IRLIServer(mut, m=M_PROBE, tau=1, k=K_TOP, mode="compact",
+                        max_batch=16, max_wait_ms=5.0)
+    try:
+        futs = [server.submit(q) for q in queries]
+        got = np.stack([f.result(timeout=120) for f in futs])
+    finally:
+        server.close()
+    np.testing.assert_array_equal(np.asarray(want), got)
+
+
+# ----------------------------------------------------- no [Q, L] guarantee --
+def _avals_of(jaxpr):
+    """Every intermediate aval in a jaxpr, recursing into sub-jaxprs
+    (pjit/scan/cond/vmap bodies)."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for p in eqn.params.values():
+            yield from _param_avals(p)
+
+
+def _param_avals(p):
+    if hasattr(p, "jaxpr") and hasattr(p, "consts"):      # ClosedJaxpr
+        yield from _avals_of(p.jaxpr)
+    elif hasattr(p, "eqns"):                               # Jaxpr
+        yield from _avals_of(p)
+    elif isinstance(p, (list, tuple)):
+        for q in p:
+            yield from _param_avals(q)
+
+
+def _materializes_QL(fn, args, n_queries, L):
+    closed = jax.make_jaxpr(fn)(*args)
+    return any(n_queries in shape and L in shape
+               for shape in (getattr(a, "shape", ()) or ()
+                             for a in _avals_of(closed.jaxpr))
+               if isinstance(shape, tuple))
+
+
+QL_N_QUERIES, QL_L = 6, 4096    # distinctive dims: nothing else is 6 x 4096
+
+
+def _ql_fixture():
+    rng = np.random.default_rng(5)
+    idx = _untrained_index(QL_L, n_buckets=64)
+    base = jnp.asarray(rng.normal(size=(QL_L, D)), jnp.float32)
+    queries = jnp.asarray(rng.normal(size=(QL_N_QUERIES, D)), jnp.float32)
+    tomb = jnp.zeros((QL_L,), bool).at[:10].set(True)
+    return idx, base, queries, tomb
+
+
+@pytest.mark.parametrize("with_stream_state", [False, True])
+def test_compact_never_materializes_QL(with_stream_state):
+    """Acceptance: the compact pipeline's traced computation contains NO
+    intermediate shaped [Q, L] — the 100M-scale serving guarantee — on both
+    the frozen path and the streaming path (delta + tombstone)."""
+    idx, base, queries, tomb = _ql_fixture()
+    _, compact = _pipelines(topC=32)
+    if with_stream_state:
+        DL = 8
+        delta = jnp.full((R, 64, DL), -1, jnp.int32)
+        fn = lambda p, mem, b, q: compact.search(p, mem, b, q, delta, tomb)
+    else:
+        fn = lambda p, mem, b, q: compact.search(p, mem, b, q)
+    args = (idx.params, idx.index.members, base, queries)
+    assert not _materializes_QL(fn, args, QL_N_QUERIES, QL_L)
+
+
+def test_dense_does_materialize_QL():
+    """Positive control for the detector: dense mode MUST show a [Q, L]
+    intermediate (the count table), or the assertion above is vacuous."""
+    idx, base, queries, _ = _ql_fixture()
+    dense, _ = _pipelines(topC=32)
+    fn = lambda p, mem, b, q: dense.search(p, mem, b, q)
+    args = (idx.params, idx.index.members, base, queries)
+    assert _materializes_QL(fn, args, QL_N_QUERIES, QL_L)
+
+
+def test_local_search_compact_never_materializes_QL():
+    idx, base, queries, tomb = _ql_fixture()
+    fn = lambda p, mem, b, q: local_search(
+        p, mem, b, q, m=M_PROBE, tau=1, k=K_TOP, mode="compact", topC=32,
+        tombstone=tomb)
+    args = (idx.params, idx.index.members, base, queries)
+    assert not _materializes_QL(fn, args, QL_N_QUERIES, QL_L)
