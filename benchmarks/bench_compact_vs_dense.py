@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import query as Q
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.data.synthetic import clustered_ann
 
 N_QUERIES = 200
@@ -48,15 +49,14 @@ def run(csv=True):
         # exactly; topC=256 shows the truncated-budget tradeoff
         for mode, topC in (("dense", 2048), ("compact", 2048),
                            ("compact", 256)):
-            pipe = Q.QueryPipeline(mode=mode, m=4, tau=1, k=10, topC=topC)
-            ids, _, n_cand = pipe.search(idx.params, idx.index.members, base,
-                                         queries)
+            sp = SearchParams(mode=mode, m=4, tau=1, k=10, topC=topC)
+            res = idx.search(queries, base, sp)
+            ids, n_cand = res.ids, res.n_candidates
             jnp.asarray(ids).block_until_ready()
             t0 = time.time()
             for _ in range(3):
-                out = pipe.search(idx.params, idx.index.members, base,
-                                  queries)
-                out[0].block_until_ready()
+                out = idx.search(queries, base, sp)
+                out.ids.block_until_ready()
             us = (time.time() - t0) / (3 * N_QUERIES) * 1e6
             rec = _recall_of_ids(ids, data.gt)
             dense_bytes = 2 * N_QUERIES * L * 4     # count + sim tables

@@ -14,6 +14,7 @@ import numpy as np
 from repro.core import query as Q
 from repro.core.distributed import shard_search_local, shard_corpus
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.data.synthetic import clustered_ann
 
 P_SHARDS = 4
@@ -44,13 +45,14 @@ def run(csv=True):
     for m in (1, 2, 4, 8):
         t0 = time.time()
         all_ids, all_scores = [], []
+        sp = SearchParams(m=m, tau=1, k=10, topC=2048)
         for s, idx in enumerate(indexes):
-            ids, scores = shard_search_local(
+            res = shard_search_local(
                 idx.params, idx.index.members, shards[s], queries,
-                m=m, tau=1, k=10, topC=2048, q_chunk=200)
-            all_ids.append(np.where(np.asarray(ids) >= 0,
-                                    np.asarray(ids) + s * L_loc, -1))
-            all_scores.append(np.asarray(scores))
+                sp, q_chunk=200)
+            all_ids.append(np.where(np.asarray(res.ids) >= 0,
+                                    np.asarray(res.ids) + s * L_loc, -1))
+            all_scores.append(np.asarray(res.scores))
         sc = np.concatenate(all_scores, 1)
         gl = np.concatenate(all_ids, 1)
         order = np.argsort(-sc, 1)[:, :10]

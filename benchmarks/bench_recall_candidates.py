@@ -14,6 +14,7 @@ import numpy as np
 from repro.core import baselines as BL
 from repro.core import query as Q
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.data.synthetic import clustered_ann
 
 B = 128
@@ -43,7 +44,8 @@ def run(csv=True):
     # candidate-set recall of the O(C) path at the same probe widths: parity
     # with the dense rows above whenever topC covers the survivors
     for m in (1, 2, 4):
-        pipe = Q.QueryPipeline(mode="compact", m=m, tau=1, k=10, topC=1024)
+        pipe = SearchParams(mode="compact", m=m, tau=1, k=10,
+                            topC=1024).pipeline()
         t0 = time.time()
         cands = pipe.candidates(idx.params, idx.index.members,
                                 jnp.asarray(data.queries))

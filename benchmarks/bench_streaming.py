@@ -10,8 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.data.synthetic import clustered_ann, _topk_l2
 from repro.stream import MutableIRLIIndex
+
+SP = SearchParams(m=8, tau=1, k=10)
 
 
 def _load_std(load) -> float:
@@ -35,10 +38,10 @@ def run(csv=True):
     rows = [("streaming/load_std_fitted", 0.0, std0)]
 
     def qps(queries, repeats=3):
-        mut.search(queries, m=8, tau=1, k=10)[0].block_until_ready()  # warmup
+        mut.search(queries, SP).ids.block_until_ready()               # warmup
         t0 = time.perf_counter()
         for _ in range(repeats):
-            mut.search(queries, m=8, tau=1, k=10)[0].block_until_ready()
+            mut.search(queries, SP).ids.block_until_ready()
         return repeats * queries.shape[0] / (time.perf_counter() - t0)
 
     rows.append(("streaming/query_qps_frozen", 0.0, qps(data.queries)))
@@ -52,8 +55,7 @@ def run(csv=True):
         t0 = time.perf_counter()
         ids = mut.insert(batch)
         t_ins += time.perf_counter() - t0
-        got, _ = mut.search(batch, m=8, tau=1, k=10)
-        got = np.asarray(got)
+        got = np.asarray(mut.search(batch, SP).ids)
         rec = float(np.mean([ids[i] in got[i] for i in range(len(ids))]))
         frac = (s + len(batch)) / n_stream
         rows.append((f"streaming/recall_inserted@frac={frac:.2f}",

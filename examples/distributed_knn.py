@@ -1,7 +1,9 @@
 """End-to-end serving driver (the paper's kind: §5.3 distributed KNN +
-batched online queries). Builds a P-way sharded IRLI index, serves batched
-requests through the micro-batching server, reports latency percentiles and
-recall — the CPU-scale analogue of the paper's 100M-point deployment.
+batched online queries). Builds a P-way sharded IRLI index implementing the
+``Searcher`` protocol (so the server treats it like any other backend),
+serves batched requests through the micro-batching server, reports latency
+percentiles and recall — the CPU-scale analogue of the paper's 100M-point
+deployment.
 
     PYTHONPATH=src python examples/distributed_knn.py [--shards 4]
 """
@@ -12,12 +14,15 @@ import numpy as np
 
 from repro.core.distributed import shard_corpus, shard_search_local
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams, SearchResult, Searcher
 from repro.data.synthetic import clustered_ann
 from repro.serve.server import IRLIServer
 
 
 class ShardedIndex:
-    """P per-shard IRLI indexes + true-distance merge (paper Fig. 5/6)."""
+    """P per-shard IRLI indexes + true-distance merge (paper Fig. 5/6).
+    Implements the Searcher protocol: search(queries, params) ->
+    SearchResult with globally-offset ids."""
 
     def __init__(self, base, n_shards, seed=0):
         self.shards = shard_corpus(base, n_shards)
@@ -34,23 +39,22 @@ class ShardedIndex:
             idx.fit(bs, gt, label_vecs=bs)
             self.indexes.append(idx)
 
-    def search(self, queries, base=None, m=4, tau=1, k=10, metric="angular"):
-        all_ids, all_sc = [], []
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        all_ids, all_sc, n_cand = [], [], 0
         for s, idx in enumerate(self.indexes):
-            ids, sc = shard_search_local(
+            res = shard_search_local(
                 idx.params, idx.index.members, self.shards[s], queries,
-                m=m, tau=tau, k=k, topC=1024, q_chunk=max(1, len(queries)))
-            all_ids.append(np.where(np.asarray(ids) >= 0,
-                                    np.asarray(ids) + s * self.L_loc, -1))
-            all_sc.append(np.asarray(sc))
+                params, q_chunk=max(1, len(queries)))
+            ids = np.asarray(res.ids)
+            all_ids.append(np.where(ids >= 0, ids + s * self.L_loc, -1))
+            all_sc.append(np.asarray(res.scores))
+            n_cand = n_cand + np.asarray(res.n_candidates)
         sc = np.concatenate(all_sc, 1)
         gl = np.concatenate(all_ids, 1)
-        order = np.argsort(-sc, 1)[:, :k]
-        return np.take_along_axis(gl, order, 1), None
-
-    def query(self, queries, m=4, tau=1):  # server fallback path
-        ids, _ = self.search(queries, m=m, tau=tau)
-        return ids, None, None
+        order = np.argsort(-sc, 1)[:, :params.k]
+        return SearchResult(ids=np.take_along_axis(gl, order, 1),
+                            scores=np.take_along_axis(sc, order, 1),
+                            n_candidates=n_cand, mode="compact")
 
 
 def main():
@@ -64,16 +68,19 @@ def main():
     print(f"building {args.shards}-way sharded index over 8192 vectors ...")
     t0 = time.time()
     sharded = ShardedIndex(data.base, args.shards)
+    assert isinstance(sharded, Searcher)
     print(f"  built in {time.time()-t0:.0f}s")
 
-    # offline recall check
-    ids, _ = sharded.search(data.queries, k=10)
-    rec = np.mean([len(set(i) & set(g)) / 10 for i, g in zip(ids, data.gt)])
+    # offline recall check through the typed interface
+    sp = SearchParams(m=4, tau=1, k=10)
+    res = sharded.search(data.queries, sp)
+    rec = np.mean([len(set(i) & set(g)) / 10
+                   for i, g in zip(res.ids, data.gt)])
     print(f"offline recall10@10 = {rec:.3f}")
 
-    # online serving through the micro-batching server
-    server = IRLIServer(sharded, m=4, tau=1, k=10, base=data.base,
-                        max_batch=64, max_wait_ms=2.0)
+    # online serving through the micro-batching server: ShardedIndex is a
+    # one-arg Searcher, so the server binds it like any other backend
+    server = IRLIServer(sharded, params=sp, max_batch=64, max_wait_ms=2.0)
     lat = []
     futs = []
     t0 = time.time()
@@ -81,7 +88,7 @@ def main():
         t = time.time()
         futs.append((t, server.submit(data.queries[i])))
     for t, f in futs:
-        f.result()
+        f.result(timeout=600)
         lat.append((time.time() - t) * 1000)
     total = time.time() - t0
     lat = np.sort(np.asarray(lat))

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import query as Q
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.data.synthetic import clustered_ann
 
 
@@ -31,8 +32,9 @@ def main():
               f"{float(ncand.mean()):.0f}/8000 candidates "
               f"({float(ncand.mean())/80:.1f}% of corpus)")
 
-    ids, _ = idx.search(data.queries[:5], data.base, m=4, tau=1, k=10)
-    print("sample top-10 ids for first query:", list(map(int, ids[0])))
+    res = idx.search(data.queries[:5], data.base, SearchParams(m=4, k=10))
+    print(f"sample top-10 ids for first query (mode={res.mode}):",
+          list(map(int, res.ids[0])))
 
 
 if __name__ == "__main__":

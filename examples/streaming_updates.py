@@ -1,11 +1,13 @@
 """Streaming updates demo: fit an IRLI index, then grow and shrink it ONLINE
-— no retraining — through the MutableIRLIIndex and the serving micro-batcher.
+— no retraining — through the MutableIRLIIndex and the serving micro-batcher,
+all via the typed search API (SearchParams in, SearchResult out).
 
     PYTHONPATH=src python examples/streaming_updates.py
 """
 import numpy as np
 
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.data.synthetic import clustered_ann, _topk_l2
 from repro.serve.server import IRLIServer
 from repro.stream import MutableIRLIIndex
@@ -25,37 +27,44 @@ def main():
     idx = IRLIIndex(cfg)
     idx.fit(base, _topk_l2(base, base, 10, "angular"), label_vecs=base)
 
+    sp = SearchParams(m=8, tau=1, k=10)
     mut = MutableIRLIIndex(idx, base)
     print(f"insert {n_new} new items (power-of-{cfg.K} online placement) ...")
     ids = mut.insert(new_vecs)
-    got, _ = mut.search(new_vecs, m=8, tau=1, k=10)
-    rec = np.mean([ids[i] in np.asarray(got)[i] for i in range(len(ids))])
-    print(f"  inserted items immediately retrievable: recall@10 = {rec:.3f}")
+    res = mut.search(new_vecs, sp)
+    got = np.asarray(res.ids)
+    rec = np.mean([ids[i] in got[i] for i in range(len(ids))])
+    print(f"  inserted items immediately retrievable: recall@10 = {rec:.3f} "
+          f"(epoch={res.epoch})")
 
     dead = np.arange(0, 200)
     print(f"delete {len(dead)} originals (tombstoned) ...")
     mut.delete(dead)
-    got, _ = mut.search(data.queries, m=8, tau=1, k=10)
-    assert not np.isin(np.asarray(got), dead).any()
+    res = mut.search(data.queries, sp)
+    assert not np.isin(np.asarray(res.ids), dead).any()
     print("  deleted ids never appear in results")
 
     print("compact (delta + tombstones -> rebuilt member matrix) ...")
-    pre, _ = mut.search(data.queries, m=8, tau=1, k=10)
+    pre = mut.search(data.queries, sp)
     mut.compact()
-    post, _ = mut.search(data.queries, m=8, tau=1, k=10)
-    same = bool(np.array_equal(np.asarray(pre), np.asarray(post)))
+    post = mut.search(data.queries, sp)
+    same = bool(np.array_equal(np.asarray(pre.ids), np.asarray(post.ids)))
     print(f"  query results preserved exactly: {same}  "
           f"(epoch={mut.epoch}, live={mut.n_live}/{mut.n_total})")
 
-    print("serving: queries + mutations through one admission queue ...")
-    server = IRLIServer(mut, m=8, tau=1, k=10, max_batch=64, max_wait_ms=2.0)
-    futs = [server.submit(q) for q in data.queries[:32]]
+    print("serving: queries + mutations through one admission queue, with a "
+          "per-request params override ...")
+    server = IRLIServer(mut, params=sp, max_batch=64, max_wait_ms=2.0)
+    futs = [server.submit(q) for q in data.queries[:24]]
+    # a few requests probe wider — they form their own micro-batch group
+    futs += [server.submit(q, sp.replace(m=16)) for q in data.queries[24:32]]
     more = server.insert(np.asarray(data.queries[:4]))   # mutation barrier
     _ = [f.result(timeout=120) for f in futs]
     print(f"  served {server.stats['requests']} queries in "
+          f"{server.stats['param_groups']} param groups / "
           f"{server.stats['batches']} batches; inserted ids "
           f"{list(map(int, more.result(timeout=120)))}; "
-          f"epoch={server.stats['epoch']}")
+          f"epoch={server.stats['epoch']}; cache={server.stats['cache']}")
     server.close()
 
 

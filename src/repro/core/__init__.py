@@ -4,3 +4,5 @@ from repro.core.partition import (hash_init, build_inverted_index, loads,
                                   load_std, bucket_targets, InvertedIndex)
 from repro.core.network import ScorerConfig, scorer_init, scorer_logits, scorer_probs, scorer_loss
 from repro.core import repartition, query, baselines, distributed, vocab_head
+from repro.core.search_api import (SearchParams, SearchResult, Searcher,
+                                   PipelineCache, DEFAULT_CACHE, as_searcher)

@@ -11,10 +11,17 @@ Mapping (DESIGN §5):
                                then all_gather of the tiny [k] winners + final
                                top-k merge (exactly the paper's CPU merge).
 
-``distributed_search`` is written with shard_map so the collective schedule
-is explicit (one all_gather of k·d floats per query — nothing else crosses
-shards). The same function lowers on the 512-device production mesh in
-launch/dryrun.py (arch id: the paper's own "irli-deep1b" config).
+All four entry points speak the typed API (core/search_api): a
+``SearchParams`` in, a ``SearchResult`` out — ``n_candidates`` is psum'd
+across shards so the response reports the GLOBAL survivor count. The old
+``m=/tau=/k=`` kwargs remain as deprecated shims returning the old
+``(ids, scores)`` tuples.
+
+``make_distributed_search`` is written with shard_map so the collective
+schedule is explicit (one all_gather of k floats + ids and one [Q] psum per
+query — nothing else crosses shards). The same function lowers on the
+512-device production mesh in launch/dryrun.py (arch id: the paper's own
+"irli-deep1b" config).
 """
 from __future__ import annotations
 
@@ -22,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.query import QueryPipeline
+from repro.core import search_api as SA
+from repro.core.search_api import SearchParams, SearchResult
 
 # jax.shard_map landed as a top-level API after 0.4.x; fall back to the
 # experimental module (same semantics, `check_rep` instead of `check_vma`)
@@ -33,12 +41,38 @@ else:
     _SM_KW = {"check_rep": False}
 
 
-def local_search(params, members, base_shard, queries, *, m: int, tau: int,
-                 k: int, loss_kind: str = "softmax_bce",
-                 metric: str = "angular", delta_members=None, tombstone=None,
-                 mode: str = "auto", topC: int = 1024):
-    """Single-shard IRLI search via QueryPipeline: queries [Q,d] vs this
-    shard's corpus.
+def _resolve(params: SearchParams, L_loc: int, q_batch: int,
+             *, force_compact: bool = False) -> SearchParams:
+    """Resolve mode against the PER-SHARD corpus size. The production path
+    (shard_search_local / make_production_search) exists for corpora where
+    dense would OOM, so it pins compact regardless of auto-resolution."""
+    if force_compact:
+        if params.mode == "dense":
+            raise ValueError("the production sharded path is compact-only "
+                             "(dense would materialize [Q, L_loc] per shard)")
+        return params.replace(mode="compact")
+    return params.resolve(L_loc, q_batch)
+
+
+def _local_arrays(scorer_params, members, base_shard, queries,
+                  params: SearchParams, delta_members, tombstone,
+                  cache: SA.PipelineCache | None):
+    """Shard-local search -> raw (ids, scores, n_cand) arrays. ``params``
+    must already be resolved. Usable inside shard_map/lax.map traces (the
+    cached jitted fn inlines)."""
+    cache = cache if cache is not None else SA.DEFAULT_CACHE
+    fn = cache.get(params, base_shard.shape[0], queries.shape[0])
+    return fn(scorer_params, members, base_shard, queries, delta_members,
+              tombstone)
+
+
+def local_search(scorer_params, members, base_shard, queries,
+                 params: SearchParams | None = None, *,
+                 delta_members=None, tombstone=None,
+                 cache: SA.PipelineCache | None = None,
+                 m=None, tau=None, k=None, loss_kind=None, metric=None,
+                 mode=None, topC=None):
+    """Single-shard IRLI search: queries [Q, d] vs this shard's corpus.
 
     members: [R, B, ML] local inverted index (ids into base_shard)
     base_shard: [L_loc, d]
@@ -46,60 +80,109 @@ def local_search(params, members, base_shard, queries, *, m: int, tau: int,
     streaming delta segments and deletion mask — candidates are unioned from
     base + delta and tombstoned ids are dropped before counting, so each
     shard of a distributed deployment can take online updates independently.
-    mode: "dense" | "compact" | "auto" (from L_loc, the query batch, and
-    the dense-table budget). "compact" counts + reranks the per-query
-    top-``topC`` frequent candidates without ever building a [Q, L_loc]
-    table. loss_kind is accepted for API stability but does not affect
-    serving — bucket selection on raw logits matches any monotone loss.
-    Returns (ids [Q,k] local ids with -1 where no candidate survived,
-    scores [Q,k]).
+
+    Typed path -> :class:`SearchResult` with LOCAL ids (-1 where no
+    candidate survived). ``params.mode="auto"`` resolves from L_loc and the
+    query batch; "compact" counts + reranks the per-query top-``topC``
+    frequent candidates without ever building a [Q, L_loc] table. The bare
+    kwargs are a deprecated shim returning the old ``(ids, scores)`` tuple
+    (loss_kind was always serving-inert: bucket selection on raw logits
+    matches any monotone loss).
     """
-    del loss_kind
-    pipe = QueryPipeline.make(base_shard.shape[0], mode=mode,
-                              q_batch=queries.shape[0], m=m, tau=tau,
-                              k=k, topC=topC, metric=metric)
-    ids, scores, _ = pipe.search(params, members, base_shard, queries,
-                                 delta_members, tombstone)
-    return ids, scores
+    if params is None:
+        del loss_kind                           # accepted, always inert
+        params = SA.params_from_legacy_kwargs(
+            "distributed.local_search", m=m, tau=tau, k=k, metric=metric,
+            mode=mode, topC=topC)
+        r = _resolve(params, base_shard.shape[0], queries.shape[0])
+        ids, scores, _ = _local_arrays(scorer_params, members, base_shard,
+                                       queries, r, delta_members, tombstone,
+                                       cache)
+        return ids, scores
+    SA.check_params("distributed.local_search", params)
+    if any(v is not None for v in (m, tau, k, loss_kind, metric, mode, topC)):
+        raise TypeError("pass either SearchParams or legacy kwargs, not both")
+    r = _resolve(params, base_shard.shape[0], queries.shape[0])
+    ids, scores, n_cand = _local_arrays(scorer_params, members, base_shard,
+                                        queries, r, delta_members, tombstone,
+                                        cache)
+    return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
+                        mode=r.mode)
 
 
-def make_distributed_search(mesh: Mesh, *, m: int, tau: int, k: int,
-                            corpus_axes=("data",), loss_kind="softmax_bce",
-                            metric="angular", mode: str = "auto",
-                            topC: int = 1024):
+def _merge_across_shards(ids, scores, n_cand, k: int, axes):
+    """all_gather the tiny [Q, k] per-shard winners (ids already globalized
+    by the caller), take the global top-k, psum the survivor counts."""
+    all_scores = jax.lax.all_gather(scores, axes, axis=1)     # [Q, P, k]
+    all_ids = jax.lax.all_gather(ids, axes, axis=1)
+    Qn = scores.shape[0]
+    best, pos = jax.lax.top_k(all_scores.reshape(Qn, -1), k)
+    merged = jnp.take_along_axis(all_ids.reshape(Qn, -1), pos, axis=1)
+    return merged, best, jax.lax.psum(n_cand, axes)
+
+
+def make_distributed_search(mesh: Mesh, params: SearchParams | None = None, *,
+                            corpus_axes=("data",),
+                            cache: SA.PipelineCache | None = None,
+                            m=None, tau=None, k=None, loss_kind=None,
+                            metric=None, mode=None, topC=None):
     """Build the sharded search fn. Per-shard params (scorers differ per
-    corpus shard, as in the paper: 8 nodes × R=4 distinct models)."""
-    ax = corpus_axes if len(corpus_axes) > 1 else corpus_axes[0]
+    corpus shard, as in the paper: 8 nodes × R=4 distinct models).
 
-    def sharded(params, members, base, queries):
+    Typed path: ``make_distributed_search(mesh, SearchParams(...))`` returns
+    ``search(scorer_params, members, base, queries) -> SearchResult`` with
+    GLOBAL ids and shard-summed n_candidates. The legacy kwarg form returns
+    the old ``(ids, scores)``-tuple function.
+    """
+    legacy = params is None
+    if legacy:
+        del loss_kind
+        params = SA.params_from_legacy_kwargs(
+            "distributed.make_distributed_search", m=m, tau=tau, k=k,
+            metric=metric, mode=mode, topC=topC)
+    elif any(v is not None
+             for v in (m, tau, k, loss_kind, metric, mode, topC)):
+        raise TypeError("pass either SearchParams or legacy kwargs, not both")
+    else:
+        SA.check_params("distributed.make_distributed_search", params)
+    sp = params
+
+    def sharded(scorer_params, members, base, queries):
+        # strip the size-1 shard-leading block dim shard_map leaves on the
+        # sharded inputs (params [1,R,...], members [1,R,B,ML], base
+        # [1,L_loc,d]); queries are replicated and arrive full
+        scorer_params = jax.tree.map(lambda x: x[0], scorer_params)
+        members = members[0]
+        base = base[0]
         # shard-local search (compact mode keeps the per-shard work O(topC)
         # per query ahead of the tiny all_gather merge)
-        ids, scores = local_search(params, members, base, queries, m=m,
-                                   tau=tau, k=k, loss_kind=loss_kind,
-                                   metric=metric, mode=mode, topC=topC)
+        r = _resolve(sp, base.shape[0], queries.shape[0])
+        ids, scores, n_cand = _local_arrays(scorer_params, members, base,
+                                            queries, r, None, None, cache)
         # globalize ids: offset by shard start (-1 "no candidate" stays -1)
         axis_index = jax.lax.axis_index(corpus_axes)
-        L_loc = base.shape[0]
-        gids = jnp.where(ids >= 0, ids + axis_index * L_loc, -1)
-        # merge: all_gather the tiny [Q, k] winners, global top-k
-        all_scores = jax.lax.all_gather(scores, corpus_axes, axis=1)  # [Q,P,k]
-        all_ids = jax.lax.all_gather(gids, corpus_axes, axis=1)
-        Qn = scores.shape[0]
-        flat_s = all_scores.reshape(Qn, -1)
-        flat_i = all_ids.reshape(Qn, -1)
-        best, pos = jax.lax.top_k(flat_s, k)
-        return jnp.take_along_axis(flat_i, pos, axis=1), best
+        gids = jnp.where(ids >= 0, ids + axis_index * base.shape[0], -1)
+        return _merge_across_shards(gids, scores, n_cand, sp.k, corpus_axes)
 
-    pspec_params = P(None)         # replicated scorer stack is the safe default;
-    # per-shard distinct params: leading axis = shard -> P(corpus_axes)
-    return _shard_map(
+    mapped = _shard_map(
         sharded, mesh=mesh,
         in_specs=(P(*(corpus_axes + (None,))),   # params leading shard axis
                   P(*(corpus_axes + (None, None, None))),   # members [P,R,B,ML]
                   P(*(corpus_axes + (None, None))),         # base [P,Lloc,d]
                   P()),                                      # queries replicated
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P()),
         **_SM_KW)
+
+    def search(scorer_params, members, base, queries):
+        ids, scores, n_cand = mapped(scorer_params, members, base, queries)
+        if legacy:
+            return ids, scores
+        L_loc = base.shape[1]
+        resolved = _resolve(sp, L_loc, queries.shape[0])
+        return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
+                            mode=resolved.mode)
+
+    return search
 
 
 def shard_corpus(base, n_shards: int):
@@ -110,13 +193,13 @@ def shard_corpus(base, n_shards: int):
 
 
 # -------------------------------------------------- production-scale path ---
-def shard_search_local(scorer_params, members, base_shard, queries, *,
-                       m: int, tau: int, k: int, topC: int = 1024,
-                       q_chunk: int = 512, loss_kind: str = "softmax_bce",
-                       metric: str = "angular", delta_members=None,
-                       tombstone=None):
-    """100M-scale per-shard search: QueryPipeline(mode="compact") + query
-    chunking.
+def shard_search_local(scorer_params, members, base_shard, queries,
+                       params: SearchParams | None = None, *,
+                       q_chunk: int = 512, delta_members=None, tombstone=None,
+                       cache: SA.PipelineCache | None = None,
+                       m=None, tau=None, k=None, topC=None, loss_kind=None,
+                       metric=None):
+    """100M-scale per-shard search: compact pipeline + query chunking.
 
     Every chip is one of the paper's "nodes": it owns base_shard [L_loc, d]
     and a full R-rep inverted index over those L_loc vectors. No [Q, L]
@@ -126,27 +209,47 @@ def shard_search_local(scorer_params, members, base_shard, queries, *,
     Queries processed in chunks of q_chunk to bound the [Qc, C, d] gather.
     Like local_search, optional delta_members/tombstone serve a shard that
     takes streaming updates.
+
+    Typed path -> :class:`SearchResult` (LOCAL ids); compact-only —
+    ``params.mode="dense"`` raises. Legacy kwargs -> old ``(ids, scores)``.
     """
-    del loss_kind                       # serving is loss-agnostic (see above)
-    pipe = QueryPipeline(mode="compact", m=m, tau=tau, k=k, topC=topC,
-                         metric=metric)
-    Q = queries.shape[0]
+    legacy = params is None
+    if legacy:
+        del loss_kind                   # serving is loss-agnostic (see above)
+        params = SA.params_from_legacy_kwargs(
+            "distributed.shard_search_local", m=m, tau=tau, k=k,
+            metric=metric, mode="compact", topC=topC)
+    elif any(v is not None for v in (m, tau, k, topC, loss_kind, metric)):
+        raise TypeError("pass either SearchParams or legacy kwargs, not both")
+    else:
+        SA.check_params("distributed.shard_search_local", params)
+    Qn = queries.shape[0]
+    chunked = not (Qn <= q_chunk or Qn % q_chunk != 0)
+    r = _resolve(params, base_shard.shape[0], q_chunk if chunked else Qn,
+                 force_compact=True)
 
     def chunk(qs):
-        ids, scores, _ = pipe.search(scorer_params, members, base_shard, qs,
-                                     delta_members, tombstone)
+        return _local_arrays(scorer_params, members, base_shard, qs,
+                             r, delta_members, tombstone, cache)
+
+    if not chunked:
+        ids, scores, n_cand = chunk(queries)
+    else:
+        qs = queries.reshape(Qn // q_chunk, q_chunk, -1)
+        ids, scores, n_cand = jax.lax.map(chunk, qs)
+        ids = ids.reshape(Qn, r.k)
+        scores = scores.reshape(Qn, r.k)
+        n_cand = n_cand.reshape(Qn)
+    if legacy:
         return ids, scores
-
-    if Q <= q_chunk or Q % q_chunk != 0:
-        return chunk(queries)
-    qs = queries.reshape(Q // q_chunk, q_chunk, -1)
-    ids, scores = jax.lax.map(chunk, qs)
-    return ids.reshape(Q, k), scores.reshape(Q, k)
+    return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
+                        mode="compact")
 
 
-def make_production_search(mesh: Mesh, *, m: int, tau: int, k: int,
-                           topC: int = 1024, loss_kind="softmax_bce",
-                           metric="angular"):
+def make_production_search(mesh: Mesh, params: SearchParams | None = None, *,
+                           cache: SA.PipelineCache | None = None,
+                           m=None, tau=None, k=None, topC=None,
+                           loss_kind=None, metric=None):
     """shard_map search over EVERY chip as a corpus shard (paper §5.3 with
     P = n_devices "nodes"). Inputs (global shapes):
 
@@ -154,28 +257,47 @@ def make_production_search(mesh: Mesh, *, m: int, tau: int, k: int,
       members: [P, R, B, ML] per-shard inverted indexes (P = mesh size)
       base:    [P, L_loc, d] per-shard corpora
       queries: [Q, d] replicated
-    Returns (ids [Q, k] GLOBAL ids, scores [Q, k]) — merged across shards.
+
+    Typed path: ``make_production_search(mesh, SearchParams(...))`` returns
+    ``search(...) -> SearchResult`` with GLOBAL ids merged across shards and
+    shard-summed n_candidates; compact-only. Legacy kwargs return the old
+    ``(ids, scores)``-tuple function.
     """
+    legacy = params is None
+    if legacy:
+        del loss_kind
+        params = SA.params_from_legacy_kwargs(
+            "distributed.make_production_search", m=m, tau=tau, k=k,
+            metric=metric, mode="compact", topC=topC)
+    elif any(v is not None for v in (m, tau, k, topC, loss_kind, metric)):
+        raise TypeError("pass either SearchParams or legacy kwargs, not both")
+    else:
+        SA.check_params("distributed.make_production_search", params)
+    sp = params
     axes = tuple(mesh.axis_names)
 
     def local(scorer_params, members, base, queries):
         members = members[0]          # strip the shard-leading dim
         base = base[0]
-        ids, scores = shard_search_local(
-            scorer_params, members, base, queries, m=m, tau=tau, k=k,
-            topC=topC, loss_kind=loss_kind, metric=metric)
+        r = _resolve(sp, base.shape[0], queries.shape[0], force_compact=True)
+        ids, scores, n_cand = _local_arrays(scorer_params, members, base,
+                                            queries, r, None, None, cache)
         # globalize ids and merge
         shard = jax.lax.axis_index(axes)
-        L_loc = base.shape[0]
-        gids = jnp.where(ids >= 0, ids + shard * L_loc, -1)
-        all_scores = jax.lax.all_gather(scores, axes, axis=1)   # [Q, P, k]
-        all_ids = jax.lax.all_gather(gids, axes, axis=1)
-        Qn = scores.shape[0]
-        best, pos = jax.lax.top_k(all_scores.reshape(Qn, -1), k)
-        return jnp.take_along_axis(all_ids.reshape(Qn, -1), pos, axis=1), best
+        gids = jnp.where(ids >= 0, ids + shard * base.shape[0], -1)
+        return _merge_across_shards(gids, scores, n_cand, sp.k, axes)
 
-    return _shard_map(
+    mapped = _shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axes, None, None, None), P(axes, None, None), P()),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P()),
         **_SM_KW)
+
+    def search(scorer_params, members, base, queries):
+        ids, scores, n_cand = mapped(scorer_params, members, base, queries)
+        if legacy:
+            return ids, scores
+        return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
+                            mode="compact")
+
+    return search

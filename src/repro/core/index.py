@@ -13,7 +13,6 @@ XML mode (label sets per train point; Def. 1 affinity).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ import numpy as np
 from repro.core import partition as PT
 from repro.core import query as Q
 from repro.core import repartition as RP
+from repro.core import search_api as SA
 from repro.core.network import ScorerConfig, scorer_init, scorer_loss
 from repro.optim.optimizers import make_optimizer
 
@@ -45,11 +45,6 @@ class IRLIConfig:
     repartition_mode: str = "exact"   # exact | parallel
     max_load_slack: float = 2.0       # member-matrix pad factor over L/B
     seed: int = 0
-
-
-@partial(jax.jit, static_argnames=("pipe",))
-def _pipeline_search(pipe: Q.QueryPipeline, params, members, base, queries):
-    return pipe.search(params, members, base, queries)
 
 
 @dataclasses.dataclass
@@ -167,17 +162,43 @@ class IRLIIndex:
                              m=m, tau=tau, L=self.cfg.n_labels,
                              loss_kind=self.cfg.loss)
 
-    def search(self, queries, base, m: int = 5, tau: int = 1, k: int = 10,
-               metric: str = "angular", mode: str = "auto", topC: int = 1024):
-        """Candidate generation + true-distance re-rank via QueryPipeline
-        -> (ids [Q, k] with -1 pad, n_candidates [Q]). mode="auto" picks
-        dense/compact from n_labels; "compact" never builds a [Q, L] table."""
+    def search(self, queries, base, params: SA.SearchParams | None = None,
+               *, cache: SA.PipelineCache | None = None, m=None, tau=None,
+               k=None, metric=None, mode=None, topC=None):
+        """Candidate generation + true-distance re-rank over ``base``.
+
+        Typed path: ``search(queries, base, SearchParams(...))`` ->
+        :class:`~repro.core.search_api.SearchResult` (ids [Q, k] with -1
+        pad, scores, per-query survivor counts, epoch=0, resolved mode).
+        The jitted pipeline comes from ``cache`` (default: the process-wide
+        ``search_api.DEFAULT_CACHE``), so equal params + shapes never
+        recompile.
+
+        The bare ``m=/tau=/k=/metric=/mode=/topC=`` kwargs are a deprecated
+        shim returning the old ``(ids, n_candidates)`` tuple.
+        """
         assert self.index is not None, "fit() or build_index() first"
-        queries = jnp.asarray(queries)
-        pipe = Q.QueryPipeline.make(self.cfg.n_labels, mode=mode,
-                                    q_batch=queries.shape[0], m=m, tau=tau,
-                                    k=k, topC=topC, metric=metric)
-        ids, _, n_cand = _pipeline_search(pipe, self.params,
-                                          self.index.members,
-                                          jnp.asarray(base), queries)
-        return ids, n_cand
+        if params is None:
+            params = SA.params_from_legacy_kwargs(
+                "IRLIIndex.search", m=m, tau=tau, k=k, metric=metric,
+                mode=mode, topC=topC)
+            res = self._search_typed(queries, base, params, cache)
+            return res.ids, res.n_candidates
+        SA.check_params("IRLIIndex.search", params)
+        if any(v is not None for v in (m, tau, k, metric, mode, topC)):
+            raise TypeError("pass either SearchParams or legacy kwargs, "
+                            "not both")
+        return self._search_typed(queries, base, params, cache)
+
+    def _search_typed(self, queries, base, params: SA.SearchParams,
+                      cache: SA.PipelineCache | None) -> SA.SearchResult:
+        cache = cache if cache is not None else SA.DEFAULT_CACHE
+        return cache.search(params, self.params, self.index.members,
+                            jnp.asarray(base), jnp.asarray(queries))
+
+    def as_searcher(self, base, cache: SA.PipelineCache | None = None
+                    ) -> SA.Searcher:
+        """Bind this frozen index to its corpus as a ``Searcher`` (one-arg
+        ``search(queries, params)`` like every other backend)."""
+        return SA.as_searcher(
+            lambda q, p: self._search_typed(q, base, p, cache))

@@ -1,0 +1,246 @@
+"""Unified typed search API for every IRLI serving surface.
+
+One request/response contract — :class:`SearchParams` in,
+:class:`SearchResult` out — shared by the five serving surfaces:
+
+  * ``IRLIIndex.search``            (frozen index)
+  * ``MutableIRLIIndex.search``     (streaming index)
+  * ``distributed.local_search`` / ``make_distributed_search`` /
+    ``shard_search_local`` / ``make_production_search``  (sharded)
+  * ``IRLIServer``                  (micro-batched serving, per-REQUEST params)
+
+plus a :class:`Searcher` protocol so backends are interchangeable (the shape
+LIRA and the multifaceted-index line of work expose), and a
+:class:`PipelineCache` so the jitted query pipeline for a given
+``(params, corpus size, batch bucket)`` is compiled exactly once and shared
+across surfaces — per-request tunability must not mean per-request
+recompilation.
+
+The old per-surface kwarg signatures (``m=, tau=, k=, metric=, mode=,
+topC=``) survive as thin shims that build a ``SearchParams`` and emit
+``DeprecationWarning`` (escalated to an error for ``repro.*`` internal
+callers by pytest.ini, so the library itself can never regress onto them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import warnings
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from repro.core import query as Q
+
+_METRICS = ("angular", "l2")
+_MODES = ("auto", "dense", "compact")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Everything a caller may tune about one search request.
+
+    Frozen + hashable: usable as a jit static argument, a dict key in the
+    :class:`PipelineCache`, and the grouping key of the server micro-batcher
+    (requests with equal params batch together). ``mode="auto"`` is resolved
+    against the actual corpus/batch size by :meth:`resolve` before any
+    pipeline is built, so two requests that resolve identically share one
+    compilation.
+    """
+    m: int = 5                 # probe width: top-m buckets per rep
+    tau: int = 1               # frequency threshold (FrequentOnes)
+    k: int = 10                # final top-k
+    topC: int = 1024           # compact-mode candidate budget per query
+    metric: str = "angular"    # "angular" | "l2"
+    mode: str = "auto"         # "auto" | "dense" | "compact"
+
+    def __post_init__(self):
+        for name in ("m", "tau", "k", "topC"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(
+                    f"SearchParams.{name} must be an int >= 1, got {v!r}")
+        if self.metric not in _METRICS:
+            raise ValueError(f"SearchParams.metric must be one of {_METRICS},"
+                             f" got {self.metric!r}")
+        if self.mode not in _MODES:
+            raise ValueError(f"SearchParams.mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+
+    def replace(self, **kw) -> "SearchParams":
+        return dataclasses.replace(self, **kw)
+
+    def resolve(self, n_labels: int, q_batch: int = 512) -> "SearchParams":
+        """Materialize ``mode="auto"`` against the corpus + batch size (same
+        rule as ``query.select_mode``: dense while the [q_batch, n_labels]
+        tables fit the budget). Resolved params are the cache key."""
+        if self.mode != "auto":
+            return self
+        return self.replace(mode=Q.select_mode(n_labels, q_batch))
+
+    def pipeline(self) -> Q.QueryPipeline:
+        """The QueryPipeline realizing these params. Resolve first."""
+        if self.mode == "auto":
+            raise ValueError("resolve() SearchParams before building a "
+                             "pipeline — mode='auto' is not executable")
+        return Q.QueryPipeline(m=self.m, tau=self.tau, k=self.k,
+                               mode=self.mode, topC=self.topC,
+                               metric=self.metric)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """The response of every serving surface.
+
+    ids/scores are [Q, k] (a single server request gets its [k] row),
+    ``ids`` padded with -1 where fewer than k candidates survived,
+    ``n_candidates`` the per-query survivor count (capped at ``topC`` in
+    compact mode, summed over shards on the distributed surfaces),
+    ``epoch`` the snapshot epoch served (0 for frozen indexes), and
+    ``mode`` the backend that actually ran ("dense" | "compact") after
+    auto-resolution.
+    """
+    ids: Any
+    scores: Any
+    n_candidates: Any
+    epoch: int = 0
+    mode: str = "compact"
+
+
+@runtime_checkable
+class Searcher(Protocol):
+    """Anything that serves a typed search request. Backends (frozen,
+    streaming, sharded, remote) are interchangeable behind this."""
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        ...
+
+
+@dataclasses.dataclass
+class _FnSearcher:
+    fn: Any
+
+    def search(self, queries, params: SearchParams) -> SearchResult:
+        return self.fn(queries, params)
+
+
+def as_searcher(fn) -> Searcher:
+    """Wrap ``fn(queries, params) -> SearchResult`` into a Searcher (e.g. to
+    bind a frozen index to its corpus: ``as_searcher(lambda q, p:
+    idx.search(q, base, p))``)."""
+    return _FnSearcher(fn)
+
+
+# ------------------------------------------------------------------- cache --
+class PipelineCache:
+    """Compiled-pipeline cache keyed on ``(resolved SearchParams, n_labels,
+    q_bucket)``.
+
+    Each entry is one jitted end-to-end search function; looking the same
+    key up N times reuses the SAME function object, so XLA compiles it once
+    per input structure. ``hits``/``misses`` count key lookups;
+    ``compiles`` counts actual traces (a trace-time side effect — it also
+    catches retraces from a changed delta/tombstone structure under one
+    key). Thread-safe: the server batcher and client threads share one
+    instance.
+    """
+
+    def __init__(self):
+        self._fns: dict = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.compiles = 0
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "compiles": self.compiles, "entries": len(self._fns)}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._fns.clear()
+
+    def get(self, params: SearchParams, n_labels: int, q_bucket: int):
+        """The jitted search fn for one resolved-params/corpus/batch key:
+        ``fn(scorer_params, members, base, queries, delta_members,
+        tombstone) -> (ids, scores, n_candidates)``."""
+        if params.mode == "auto":
+            raise ValueError("PipelineCache keys need resolved params — "
+                             "call params.resolve(n_labels, q_batch) first")
+        key = (params, int(n_labels), int(q_bucket))
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.misses += 1
+            pipe = params.pipeline()
+
+            def run(scorer_params, members, base, queries, delta_members,
+                    tombstone):
+                self.compiles += 1      # trace-time only: counts compilations
+                return pipe.search(scorer_params, members, base, queries,
+                                   delta_members, tombstone)
+
+            fn = jax.jit(run)
+            self._fns[key] = fn
+            return fn
+
+    def search(self, params: SearchParams, scorer_params, members, base,
+               queries, delta_members=None, tombstone=None, *,
+               epoch: int = 0) -> SearchResult:
+        """Resolve params against this corpus/batch, fetch-or-compile the
+        pipeline, run it, and wrap the typed result."""
+        resolved = params.resolve(int(base.shape[0]), int(queries.shape[0]))
+        fn = self.get(resolved, base.shape[0], queries.shape[0])
+        ids, scores, n_cand = fn(scorer_params, members, base, queries,
+                                 delta_members, tombstone)
+        return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
+                            epoch=epoch, mode=resolved.mode)
+
+
+#: Process-wide default cache: surfaces that aren't handed a private cache
+#: (e.g. a bare ``idx.search``) all share this one.
+DEFAULT_CACHE = PipelineCache()
+
+
+def check_params(surface: str, params) -> SearchParams:
+    """Reject a non-SearchParams value in the params slot with a clear
+    migration error. Pre-redesign call sites passed the knobs positionally
+    (``idx.search(q, base, 5, 1, 10)``) — without this check such a call
+    would bind an int to ``params`` and die deep inside the cache with an
+    opaque AttributeError."""
+    if not isinstance(params, SearchParams):
+        raise TypeError(
+            f"{surface} takes a SearchParams in its params slot, got "
+            f"{type(params).__name__} — positional m/tau/k knobs are no "
+            "longer accepted; build a SearchParams (docs/search_api.md)")
+    return params
+
+
+# ------------------------------------------------------------- deprecation --
+_LEGACY_DEFAULTS = {"m": 5, "tau": 1, "k": 10, "topC": 1024,
+                    "metric": "angular", "mode": "auto"}
+
+
+def params_from_legacy_kwargs(surface: str, *, stacklevel: int = 3,
+                              **kw) -> SearchParams:
+    """Build SearchParams from an old-style kwarg call and warn.
+
+    ``kw`` values of None mean "not passed" and take the shared defaults
+    (identical to the old per-surface defaults, so the shim is bit-identical
+    to the typed path). stacklevel=3 attributes the warning to the shim's
+    CALLER, which is what pytest.ini's repro-scoped error filter matches —
+    internal callers fail, external users just see the warning.
+    """
+    filled = {name: (default if kw.get(name) is None else kw[name])
+              for name, default in _LEGACY_DEFAULTS.items()}
+    warnings.warn(
+        f"{surface} with bare m=/tau=/k=/metric=/mode=/topC= kwargs is "
+        f"deprecated; pass SearchParams(m={filled['m']}, tau={filled['tau']},"
+        f" k={filled['k']}, ...) instead (see docs/search_api.md)",
+        DeprecationWarning, stacklevel=stacklevel)
+    return SearchParams(**filled)

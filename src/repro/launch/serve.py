@@ -1,8 +1,11 @@
-"""Serving launcher CLI: build a sharded IRLI index over a synthetic corpus
-and serve batched online queries through the micro-batching server,
-printing recall + latency percentiles.
+"""Serving launcher CLI: build an IRLI index over a synthetic corpus and
+serve batched online queries through the micro-batching server via the
+typed search API (SearchParams in, SearchResult out), printing recall +
+latency percentiles and the pipeline-cache counters. A slice of the
+requests carries a per-request SearchParams override (wider probe), so the
+run also exercises the server's params-grouped micro-batching.
 
-    PYTHONPATH=src python -m repro.launch.serve [--requests 256] [--shards 2]
+    PYTHONPATH=src python -m repro.launch.serve [--requests 256] [--base 4096]
 
 (The production 512-chip serving program is exercised by
 ``launch/dryrun.py --arch irli-deep1b --shape serve_query``.)
@@ -16,34 +19,38 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=256)
-    ap.add_argument("--shards", type=int, default=2)
     ap.add_argument("--base", type=int, default=4096)
+    ap.add_argument("--rounds", type=int, default=3)
     args = ap.parse_args()
 
     from repro.core.index import IRLIIndex, IRLIConfig
+    from repro.core.search_api import SearchParams
     from repro.data.synthetic import clustered_ann
     from repro.serve.server import IRLIServer
 
     data = clustered_ann(n_base=args.base, n_queries=args.requests, d=16,
-                         n_clusters=args.base // 20, seed=0)
+                         n_clusters=max(2, args.base // 20), seed=0)
     print(f"fitting index over {args.base} vectors ...")
     cfg = IRLIConfig(d=16, n_labels=args.base, n_buckets=64, n_reps=4,
-                     d_hidden=96, K=10, rounds=3, epochs_per_round=3,
+                     d_hidden=96, K=10, rounds=args.rounds, epochs_per_round=3,
                      batch_size=512, lr=2e-3, seed=0)
     idx = IRLIIndex(cfg)
     idx.fit(data.train_queries, data.train_gt, label_vecs=data.base)
 
-    server = IRLIServer(idx, m=4, tau=1, k=10, base=data.base,
+    default = SearchParams(m=4, tau=1, k=10)
+    wide = default.replace(m=8)           # per-request override: probe wider
+    server = IRLIServer(idx, params=default, base=data.base,
                         max_batch=64, max_wait_ms=2.0)
     futs, lat = [], []
     t0 = time.time()
     for i in range(args.requests):
-        futs.append((time.time(), server.submit(data.queries[i])))
+        p = wide if i % 8 == 0 else default
+        futs.append((time.time(), server.submit(data.queries[i], p)))
     hits = 0
     for i, (t, f) in enumerate(futs):
-        ids = f.result()
+        res = f.result(timeout=600)
         lat.append((time.time() - t) * 1000)
-        hits += len(set(map(int, ids)) & set(map(int, data.gt[i]))) / 10
+        hits += len(set(map(int, res.ids)) & set(map(int, data.gt[i]))) / 10
     total = time.time() - t0
     lat = np.sort(np.asarray(lat))
     print(f"served {args.requests} requests in {total:.2f}s "
@@ -51,7 +58,8 @@ def main():
           f"{hits / args.requests:.3f}")
     print(f"latency ms: p50={lat[len(lat) // 2]:.1f} "
           f"p95={lat[int(len(lat) * .95)]:.1f} "
-          f"p99={lat[int(len(lat) * .99)]:.1f}; stats={server.stats}")
+          f"p99={lat[int(len(lat) * .99)]:.1f}")
+    print(f"stats={server.stats}")
     server.close()
 
 

@@ -252,14 +252,16 @@ def build_irli_serve(mesh, m: int, tau: int, k: int, loss_kind="softmax_bce",
     """Production sharded-corpus IRLI query (paper §5.3 / Fig. 5-6): every
     chip = one paper "node" owning L/P vectors + its R-rep inverted index;
     shard_map with one tiny all_gather merge."""
+    del loss_kind                   # serving is loss-agnostic
     from repro.core.distributed import make_production_search
+    from repro.core.search_api import SearchParams
 
-    search = make_production_search(mesh, m=m, tau=tau, k=k,
-                                    loss_kind=loss_kind, metric=metric)
+    search = make_production_search(
+        mesh, SearchParams(m=m, tau=tau, k=k, metric=metric))
 
     def step(params, batch):
-        ids, scores = search(params["scorer"], params["members"],
-                             params["base"], batch["queries"])
-        return {"ids": ids, "scores": scores}
+        res = search(params["scorer"], params["members"],
+                     params["base"], batch["queries"])
+        return {"ids": res.ids, "scores": res.scores}
 
     return step

@@ -3,11 +3,16 @@ with online mutation admission for the streaming mutable index.
 
 The paper reports per-point latencies at batch sizes 1-10k (Figs. 5-6); real
 deployments amortize the R-net forward over a micro-batch. This server:
-  - collects requests up to ``max_batch`` or ``max_wait_ms``
-  - pads the batch to a bucket size (one jit specialization per bucket)
-  - runs the index's QueryPipeline (``mode``/``topC`` select the dense or
-    compact frequency backend — see docs/query_paths.md) and scatters
-    results back to futures
+  - speaks the typed API (core/search_api): a default ``SearchParams`` at
+    construction, overridable PER REQUEST (``submit(q, params)``); futures
+    resolve to a per-request ``SearchResult``
+  - collects requests up to ``max_batch`` or ``max_wait_ms``, grouping by
+    params: same-params requests batch together, a differing-params request
+    closes the current group and starts the next (arrival order preserved)
+  - pads each group to a bucket size (ladder derived from ``max_batch``, so
+    a full batch never pads past itself) — one jit specialization per
+    (params, bucket), compiled once and reused via this server's
+    ``PipelineCache`` (hit/miss/compile counters in ``stats["cache"]``)
   - admits ``insert``/``delete`` mutations through the SAME queue, so
     updates are serialized with queries in arrival order: a mutation acts as
     a batch barrier (the in-flight query batch is served against the old
@@ -15,17 +20,28 @@ deployments amortize the R-net forward over a micro-batch. This server:
     Requires the wrapped index to be a stream.MutableIRLIIndex.
   - fails all still-pending futures on close() instead of leaving callers
     blocked forever.
+
+The old ``IRLIServer(index, m=, tau=, k=, metric=, mode=, topC=)``
+constructor kwargs are a deprecated shim; a server built with EXPLICIT
+legacy kwargs keeps the old future payloads (bare top-k id rows) for
+bit-compatibility. A server built with no search knobs at all
+(``IRLIServer(idx, base=...)``) is typed: it serves ``SearchParams()``
+defaults (numerically identical to the old defaults) and its futures
+resolve to ``SearchResult`` — callers that unpacked bare id rows must read
+``result.ids`` (see the README migration table).
 """
 from __future__ import annotations
 
+import inspect
 import queue
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.core import search_api as SA
+from repro.core.search_api import PipelineCache, SearchParams, SearchResult
 
 
 def _fulfill(fut: Future, value) -> None:
@@ -46,32 +62,84 @@ def _fail(fut: Future, exc: BaseException) -> None:
         pass
 
 
-class IRLIServer:
-    BUCKETS = (1, 8, 32, 128, 512)
+def _bucket_ladder(max_batch: int) -> tuple:
+    """Pad-bucket sizes clamped to max_batch: 1, 8, 32, 128, 512, ... but
+    never past the largest batch the collector can form — with max_batch=64
+    a full 64-request batch pads to 64, not 128 (pad_waste would otherwise
+    double)."""
+    out, b = [], 1
+    while b < max_batch:
+        out.append(b)
+        b = 8 if b == 1 else b * 4
+    out.append(max_batch)
+    return tuple(out)
 
-    def __init__(self, index, *, m: int = 5, tau: int = 1, k: int = 10,
+
+class IRLIServer:
+    def __init__(self, index, *, params: SearchParams | None = None,
                  max_batch: int = 512, max_wait_ms: float = 2.0,
-                 base=None, metric: str = "angular", mode: str = "auto",
-                 topC: int = 1024):
+                 base=None, cache: PipelineCache | None = None,
+                 m=None, tau=None, k=None, metric=None, mode=None, topC=None):
+        legacy = (params is None
+                  and any(v is not None
+                          for v in (m, tau, k, metric, mode, topC)))
+        if legacy:
+            params = SA.params_from_legacy_kwargs(
+                "IRLIServer", m=m, tau=tau, k=k, metric=metric, mode=mode,
+                topC=topC)
+        elif params is None:
+            params = SearchParams()
+        elif any(v is not None for v in (m, tau, k, metric, mode, topC)):
+            raise TypeError("pass either SearchParams or legacy kwargs, "
+                            "not both")
+        else:
+            SA.check_params("IRLIServer", params)
         self.index = index
-        self.m, self.tau, self.k = m, tau, k
+        self.default_params = params
+        # legacy-constructed servers keep the old future payload (a bare
+        # [k] id row); typed servers resolve futures to SearchResult
+        self._legacy_results = legacy
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.base = base
-        self.metric = metric
-        # QueryPipeline backend for every served batch: "auto" resolves
-        # dense/compact from the index's corpus size; "compact" serves with
-        # delta/tombstone union and NO [Q, L] count table (the 100M path)
-        self.mode, self.topC = mode, topC
+        self.buckets = _bucket_ladder(max_batch)
+        self.cache = cache if cache is not None else PipelineCache()
         # mutable (stream.MutableIRLIIndex) indexes carry their own vector
         # buffer and mutation API; frozen IRLIIndex needs ``base`` to rerank
         self._mutable = hasattr(index, "insert") and hasattr(index, "delete")
+        self._searcher = self._bind_searcher()
         self.q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
-        self.stats = {"batches": 0, "requests": 0, "pad_waste": 0,
-                      "mutations": 0, "epoch": getattr(index, "epoch", 0)}
+        self._stats = {"batches": 0, "requests": 0, "pad_waste": 0,
+                       "param_groups": 0, "mutations": 0,
+                       "epoch": getattr(index, "epoch", 0)}
         self.thread = threading.Thread(target=self._loop, daemon=True)
         self.thread.start()
+
+    def _bind_searcher(self):
+        """One callable ``(queries, params) -> SearchResult`` for whatever
+        backend this server wraps: a MutableIRLIIndex or any one-arg
+        ``Searcher`` takes (queries, params); a frozen IRLIIndex needs
+        ``base`` threaded in. None means the mask-only fallback
+        (``index.query``) for a frozen index given no corpus. A backend
+        whose ``search`` accepts a ``cache`` kwarg shares this server's
+        PipelineCache, so ``stats["cache"]`` reflects its compilations."""
+        search = getattr(self.index, "search", None)
+        if search is None:
+            return None
+        takes_cache = "cache" in inspect.signature(search).parameters
+        ckw = {"cache": self.cache} if takes_cache else {}
+        if not self._mutable and self.base is not None:
+            return lambda qs, p: search(qs, self.base, p, **ckw)
+        if self._mutable or not hasattr(self.index, "query"):
+            return lambda qs, p: search(qs, p, **ckw)
+        return None     # frozen index, no corpus: candidate-mask fallback
+
+    @property
+    def stats(self) -> dict:
+        """Counters snapshot, including the pipeline-cache hit/miss/compile
+        counts (per-request params must not mean per-request compiles)."""
+        return dict(self._stats, cache=self.cache.stats())
 
     # ------------------------------------------------------------- client --
     def _enqueue(self, op: str, payload) -> Future:
@@ -88,11 +156,22 @@ class IRLIServer:
             _fail(fut, RuntimeError("IRLIServer is closed"))
         return fut
 
-    def submit(self, query: np.ndarray) -> Future:
-        return self._enqueue("query", query)
+    def submit(self, query: np.ndarray,
+               params: SearchParams | None = None) -> Future:
+        """Enqueue one query; ``params`` overrides the server default for
+        THIS request (it will batch with equal-params neighbors)."""
+        if params is not None:
+            SA.check_params("IRLIServer.submit", params)
+        return self._enqueue(
+            "query", (query, params if params is not None
+                      else self.default_params))
 
-    def search(self, query: np.ndarray):
-        return self.submit(query).result()
+    def search(self, query: np.ndarray, params: SearchParams | None = None,
+               *, timeout: float | None = None):
+        """Blocking submit; ``timeout`` (seconds) forwards to
+        ``Future.result`` — a stuck batcher raises TimeoutError instead of
+        hanging the caller forever."""
+        return self.submit(query, params).result(timeout)
 
     def insert(self, vecs: np.ndarray) -> Future:
         """Enqueue an insert; the future resolves to the assigned ids."""
@@ -104,7 +183,7 @@ class IRLIServer:
 
     # ------------------------------------------------------------- server --
     def _bucket(self, n: int) -> int:
-        for b in self.BUCKETS:
+        for b in self.buckets:
             if n <= b:
                 return b
         return self.max_batch
@@ -117,13 +196,13 @@ class IRLIServer:
                     "frozen index")
             res = (self.index.insert(payload) if op == "insert"
                    else self.index.delete(payload))
-            self.stats["mutations"] += 1
-            self.stats["epoch"] = self.index.epoch
+            self._stats["mutations"] += 1
+            self._stats["epoch"] = self.index.epoch
             _fulfill(fut, res)                      # caller may have cancelled
         except Exception as e:                      # surface to the caller
             _fail(fut, e)
 
-    def _run_batch(self, batch):
+    def _run_batch(self, batch, params: SearchParams):
         n = len(batch)
         nb = self._bucket(n)
         try:
@@ -133,33 +212,36 @@ class IRLIServer:
             if nb > n:  # pad to bucket -> stable jit cache
                 queries = np.concatenate(
                     [queries, np.repeat(queries[-1:], nb - n, 0)])
-            if self._mutable:
-                ids, _ = self.index.search(queries, m=self.m, tau=self.tau,
-                                           k=self.k, metric=self.metric,
-                                           mode=self.mode, topC=self.topC)
-                out = np.asarray(ids)
-            elif self.base is not None:
-                ids, _ = self.index.search(queries, self.base, m=self.m,
-                                           tau=self.tau, k=self.k,
-                                           metric=self.metric,
-                                           mode=self.mode, topC=self.topC)
-                out = np.asarray(ids)
+            if self._searcher is not None:
+                res: SearchResult = self._searcher(queries, params)
+                ids = np.asarray(res.ids)
+                scores = np.asarray(res.scores)
+                n_cand = np.asarray(res.n_candidates)
+                if self._legacy_results:
+                    out = [ids[i] for i in range(n)]
+                else:
+                    out = [SearchResult(ids=ids[i], scores=scores[i],
+                                        n_candidates=int(n_cand[i]),
+                                        epoch=res.epoch, mode=res.mode)
+                           for i in range(n)]
             else:
-                mask, freq, _ = self.index.query(queries, m=self.m,
-                                                 tau=self.tau)
-                out = np.asarray(mask)
+                mask, freq, _ = self.index.query(queries, m=params.m,
+                                                 tau=params.tau)
+                out = list(np.asarray(mask)[:n])
         except Exception as e:
             for _, fut in batch:
                 _fail(fut, e)
             return
-        self.stats["batches"] += 1
-        self.stats["requests"] += n
-        self.stats["pad_waste"] += nb - n
+        self._stats["batches"] += 1
+        self._stats["requests"] += n
+        self._stats["pad_waste"] += nb - n
         for i, (_, fut) in enumerate(batch):
             _fulfill(fut, out[i])                   # cancelled while queued
 
+
     def _loop(self):
-        pending = None   # mutation popped mid-collection: batch barrier
+        pending = None   # barrier popped mid-collection: a mutation, or a
+        #                  query whose params differ from the open group
         while not self._stop.is_set():
             if pending is not None:
                 item, pending = pending, None
@@ -172,7 +254,8 @@ class IRLIServer:
             if op != "query":
                 self._apply_mutation(op, payload, fut)
                 continue
-            batch = [(payload, fut)]
+            group_params = payload[1]
+            batch = [(payload[0], fut)]
             deadline = time.time() + self.max_wait
             while len(batch) < self.max_batch:
                 timeout = deadline - time.time()
@@ -182,12 +265,13 @@ class IRLIServer:
                     nxt = self.q.get(timeout=timeout)
                 except queue.Empty:
                     break
-                if nxt[0] != "query":
-                    pending = nxt        # serve the batch first, then mutate
+                if nxt[0] != "query" or nxt[1][1] != group_params:
+                    pending = nxt        # barrier: serve this group first
                     break
-                batch.append((nxt[1], nxt[2]))
-            self._run_batch(batch)
-        # loop exited with a mutation parked: fail it directly — re-queueing
+                batch.append((nxt[1][0], nxt[2]))
+            self._stats["param_groups"] += 1
+            self._run_batch(batch, group_params)
+        # loop exited with an item parked: fail it directly — re-queueing
         # would race with close()'s drain (which may already have finished)
         if pending is not None:
             _fail(pending[2],

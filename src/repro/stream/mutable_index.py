@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import query as Q
+from repro.core import search_api as SA
 from repro.core.index import IRLIIndex
 from repro.core.network import scorer_probs
 from repro.core.repartition import kchoice_exact
@@ -78,17 +79,6 @@ def _query_impl(params, members, delta_members, tombstone, queries, *,
     return Q.query_members(params, members, queries, m=m, tau=tau, L=L,
                            loss_kind=loss_kind, delta_members=delta_members,
                            tombstone=tombstone)
-
-
-@partial(jax.jit, static_argnames=("pipe",))
-def _search_impl(pipe: Q.QueryPipeline, params, members, delta_members,
-                 tombstone, vecs, queries):
-    """QueryPipeline.search over a snapshot's raw arrays. The pipeline
-    handles delta union, tombstone masking, and -1 padding for slots with
-    no surviving candidate; compact mode never builds a [Q, capacity]
-    count/similarity table."""
-    return pipe.search(params, members, vecs, queries, delta_members,
-                       tombstone)
 
 
 class MutableIRLIIndex:
@@ -163,23 +153,39 @@ class MutableIRLIIndex:
                            s.tombstone, jnp.asarray(queries), m=m, tau=tau,
                            L=self.capacity, loss_kind=self.cfg.loss)
 
-    def search(self, queries, m: int = 5, tau: int = 1, k: int = 10,
-               metric: str = "angular", mode: str = "auto",
-               topC: int = 1024):
+    def search(self, queries, params: SA.SearchParams | None = None, *,
+               cache: SA.PipelineCache | None = None, m=None, tau=None,
+               k=None, metric=None, mode=None, topC=None):
         """Candidate generation + true-distance re-rank over the LIVE corpus
-        (base + inserted - deleted). -> (ids [Q, k] with -1 pad, n_cand).
-        mode="auto" picks dense/compact from the vector-buffer capacity;
-        "compact" serves with no [Q, capacity] intermediate (n_cand is then
-        capped at topC)."""
-        s = self._snapshot
-        queries = jnp.asarray(queries)
-        pipe = Q.QueryPipeline.make(self.capacity, mode=mode,
-                                    q_batch=queries.shape[0], m=m, tau=tau,
-                                    k=k, topC=topC, metric=metric)
-        ids, _, n_cand = _search_impl(
-            pipe, s.params, s.members, s.delta.members, s.tombstone, s.vecs,
-            queries)
-        return ids, n_cand
+        (base + inserted - deleted).
+
+        Typed path: ``search(queries, SearchParams(...))`` ->
+        :class:`~repro.core.search_api.SearchResult` served against ONE
+        consistent snapshot (``result.epoch`` names it). mode="auto"
+        resolves dense/compact from the vector-buffer capacity; "compact"
+        serves with no [Q, capacity] intermediate (n_candidates is then
+        capped at topC). The bare kwargs are a deprecated shim returning
+        the old ``(ids, n_candidates)`` tuple.
+        """
+        if params is None:
+            params = SA.params_from_legacy_kwargs(
+                "MutableIRLIIndex.search", m=m, tau=tau, k=k, metric=metric,
+                mode=mode, topC=topC)
+            res = self._search_typed(queries, params, cache)
+            return res.ids, res.n_candidates
+        SA.check_params("MutableIRLIIndex.search", params)
+        if any(v is not None for v in (m, tau, k, metric, mode, topC)):
+            raise TypeError("pass either SearchParams or legacy kwargs, "
+                            "not both")
+        return self._search_typed(queries, params, cache)
+
+    def _search_typed(self, queries, params: SA.SearchParams,
+                      cache: SA.PipelineCache | None) -> SA.SearchResult:
+        s = self._snapshot          # ONE read: a consistent view throughout
+        cache = cache if cache is not None else SA.DEFAULT_CACHE
+        return cache.search(params, s.params, s.members, s.vecs,
+                            jnp.asarray(queries), s.delta.members,
+                            s.tombstone, epoch=s.epoch)
 
     # ----------------------------------------------------------- mutation --
     def insert(self, vecs) -> np.ndarray:

@@ -18,6 +18,7 @@ _SCRIPT = textwrap.dedent("""
     from repro.core.distributed import make_production_search, shard_search_local
     from repro.core.network import ScorerConfig, scorer_init
     from repro.core.partition import hash_init, build_inverted_index
+    from repro.core.search_api import SearchParams
 
     P_SHARDS = 8
     L_LOC, D, B, R = 512, 16, 32, 4
@@ -36,17 +37,20 @@ _SCRIPT = textwrap.dedent("""
 
     queries = jnp.asarray(rng.normal(size=(16, D)), jnp.float32)
 
-    search = make_production_search(mesh, m=4, tau=1, k=5)
-    ids, scores = search(scorer, members, base, queries)
+    sp = SearchParams(m=4, tau=1, k=5, topC=1024)
+    search = make_production_search(mesh, sp)
+    res = search(scorer, members, base, queries)
+    ids, scores = res.ids, res.scores
 
     # reference: loop shards on one device, merge manually
-    ref_ids, ref_scores = [], []
+    ref_ids, ref_scores, ref_ncand = [], [], 0
     for s in range(P_SHARDS):
-        i, sc = shard_search_local(scorer, members[s], base[s], queries,
-                                   m=4, tau=1, k=5, topC=1024, q_chunk=16)
-        ref_ids.append(np.where(np.asarray(i) >= 0,
-                                np.asarray(i) + s * L_LOC, -1))
-        ref_scores.append(np.asarray(sc))
+        r = shard_search_local(scorer, members[s], base[s], queries,
+                               sp, q_chunk=16)
+        ref_ids.append(np.where(np.asarray(r.ids) >= 0,
+                                np.asarray(r.ids) + s * L_LOC, -1))
+        ref_scores.append(np.asarray(r.scores))
+        ref_ncand = ref_ncand + np.asarray(r.n_candidates)
     all_sc = np.concatenate(ref_scores, 1)
     all_id = np.concatenate(ref_ids, 1)
     order = np.argsort(-all_sc, 1)[:, :5]
@@ -59,7 +63,50 @@ _SCRIPT = textwrap.dedent("""
     # id sets should match where scores are finite
     ok_ids = all(set(g[np.isfinite(s)]) == set(w[np.isfinite(ws)])
                  for g, s, w, ws in zip(np.asarray(ids), got_sc, want_id, want_sc))
+    # SearchResult.n_candidates must be the psum of per-shard survivor counts
+    ok_ncand = bool(np.array_equal(np.asarray(res.n_candidates), ref_ncand))
+
+    # ---- make_distributed_search: per-shard DISTINCT scorers over "data" --
+    from repro.core.distributed import local_search, make_distributed_search
+    P2 = 4                      # the mesh's "data" axis
+    scorers = [scorer_init(jax.random.PRNGKey(100 + s),
+                           ScorerConfig(d_in=D, d_hidden=32, n_buckets=B,
+                                        n_reps=R)) for s in range(P2)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scorers)
+    base2 = jnp.asarray(rng.normal(size=(P2, L_LOC, D)), jnp.float32)
+    members2 = jnp.stack([
+        build_inverted_index(hash_init(L_LOC, B, R, seed=20 + s), B,
+                             max_load=2 * L_LOC // B).members
+        for s in range(P2)])
+    dsearch = make_distributed_search(mesh, sp)
+    dres = dsearch(stacked, members2, base2, queries)
+    # reference: per-shard local_search with each shard's own scorer
+    ds, di, dn = [], [], 0
+    for s in range(P2):
+        r = local_search(scorers[s], members2[s], base2[s], queries, sp)
+        di.append(np.where(np.asarray(r.ids) >= 0,
+                           np.asarray(r.ids) + s * L_LOC, -1))
+        ds.append(np.asarray(r.scores))
+        dn = dn + np.asarray(r.n_candidates)
+    dsc = np.concatenate(ds, 1)
+    did = np.concatenate(di, 1)
+    dorder = np.argsort(-dsc, 1)[:, :5]
+    dwant_sc = np.take_along_axis(dsc, dorder, 1)
+    dwant_id = np.take_along_axis(did, dorder, 1)
+    dgot_sc = np.asarray(dres.scores)
+    ok_dist_scores = np.allclose(np.sort(dgot_sc, 1), np.sort(dwant_sc, 1),
+                                 rtol=1e-4, atol=1e-4)
+    ok_dist_ids = all(
+        set(g[np.isfinite(gs)]) == set(w[np.isfinite(ws)])
+        for g, gs, w, ws in zip(np.asarray(dres.ids), dgot_sc,
+                                dwant_id, dwant_sc))
+    ok_dist_ncand = bool(np.array_equal(np.asarray(dres.n_candidates), dn))
+
     print(json.dumps({"ok_scores": bool(ok_scores), "ok_ids": bool(ok_ids),
+                      "ok_ncand": ok_ncand,
+                      "ok_dist_scores": bool(ok_dist_scores),
+                      "ok_dist_ids": bool(ok_dist_ids),
+                      "ok_dist_ncand": ok_dist_ncand,
                       "n_devices": len(jax.devices())}))
 """)
 
@@ -74,3 +121,7 @@ def test_production_search_matches_reference():
     assert rec["n_devices"] == 8
     assert rec["ok_scores"], rec
     assert rec["ok_ids"], rec
+    assert rec["ok_ncand"], rec
+    assert rec["ok_dist_scores"], rec
+    assert rec["ok_dist_ids"], rec
+    assert rec["ok_dist_ncand"], rec

@@ -141,14 +141,16 @@ def test_server_microbatching():
     data = clustered_ann(n_base=1000, n_queries=40, d=8, n_clusters=50, seed=0)
     cfg = IRLIConfig(d=8, n_labels=1000, n_buckets=32, n_reps=2, d_hidden=32,
                      K=8, rounds=1, epochs_per_round=2, batch_size=256, seed=0)
+    from repro.core.search_api import SearchParams
     idx = IRLIIndex(cfg)
     idx.fit(data.train_queries, data.train_gt, label_vecs=data.base)
-    server = IRLIServer(idx, m=4, tau=1, k=5, base=data.base, max_batch=16,
-                        max_wait_ms=5.0)
+    server = IRLIServer(idx, params=SearchParams(m=4, tau=1, k=5),
+                        base=data.base, max_batch=16, max_wait_ms=5.0)
     futs = [server.submit(data.queries[i]) for i in range(40)]
     results = [f.result(timeout=120) for f in futs]
     server.close()
-    assert all(r.shape == (5,) for r in results)
+    assert all(r.ids.shape == (5,) for r in results)
+    assert all(r.scores.shape == (5,) for r in results)
     assert server.stats["requests"] == 40
     assert server.stats["batches"] <= 40  # some batching happened
 

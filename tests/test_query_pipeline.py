@@ -11,6 +11,7 @@ import pytest
 from repro.core import query as Q
 from repro.core.distributed import local_search
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.stream import MutableIRLIIndex
 
 D, B, R, M_PROBE, K_TOP = 16, 16, 2, 4, 5
@@ -123,14 +124,15 @@ def test_equivalence_streaming(tau):
     """Streaming path: delta segments unioned, tombstones dropped — both
     modes, via MutableIRLIIndex.search."""
     mut, queries = _mutated_index()
-    ids_d, nc_d = mut.search(queries, m=M_PROBE, tau=tau, k=K_TOP,
-                             mode="dense")
-    ids_c, nc_c = mut.search(queries, m=M_PROBE, tau=tau, k=K_TOP,
-                             mode="compact", topC=1024)
-    np.testing.assert_array_equal(np.asarray(nc_d), np.asarray(nc_c))
-    _assert_same_results(ids_d, ids_c, np.asarray(nc_d) >= K_TOP)
+    common = dict(m=M_PROBE, tau=tau, k=K_TOP, topC=1024)
+    d = mut.search(queries, SearchParams(mode="dense", **common))
+    c = mut.search(queries, SearchParams(mode="compact", **common))
+    assert (d.mode, c.mode) == ("dense", "compact")
+    np.testing.assert_array_equal(np.asarray(d.n_candidates),
+                                  np.asarray(c.n_candidates))
+    _assert_same_results(d.ids, c.ids, np.asarray(d.n_candidates) >= K_TOP)
     dead = np.asarray(mut.snapshot.tombstone).nonzero()[0]
-    assert not np.isin(np.asarray(ids_c), dead).any()
+    assert not np.isin(np.asarray(c.ids), dead).any()
 
 
 def test_equivalence_per_shard():
@@ -138,15 +140,16 @@ def test_equivalence_per_shard():
     with live delta + tombstone state."""
     mut, queries = _mutated_index(seed=3)
     s = mut.snapshot
-    kw = dict(m=M_PROBE, tau=1, k=K_TOP, delta_members=s.delta.members,
-              tombstone=s.tombstone)
-    ids_d, sc_d = local_search(mut.params, s.members, s.vecs, queries,
-                               mode="dense", **kw)
-    ids_c, sc_c = local_search(mut.params, s.members, s.vecs, queries,
-                               mode="compact", topC=1024, **kw)
-    full = np.isfinite(np.asarray(sc_d)).all(axis=1)
-    _assert_same_results(ids_d, ids_c, full)
-    np.testing.assert_allclose(np.asarray(sc_d)[full], np.asarray(sc_c)[full],
+    kw = dict(delta_members=s.delta.members, tombstone=s.tombstone)
+    common = dict(m=M_PROBE, tau=1, k=K_TOP, topC=1024)
+    d = local_search(mut.params, s.members, s.vecs, queries,
+                     SearchParams(mode="dense", **common), **kw)
+    c = local_search(mut.params, s.members, s.vecs, queries,
+                     SearchParams(mode="compact", **common), **kw)
+    full = np.isfinite(np.asarray(d.scores)).all(axis=1)
+    _assert_same_results(d.ids, c.ids, full)
+    np.testing.assert_allclose(np.asarray(d.scores)[full],
+                               np.asarray(c.scores)[full],
                                rtol=1e-5, atol=1e-5)
 
 
@@ -155,15 +158,17 @@ def test_server_serves_compact_pipeline():
     results equal the direct compact search."""
     from repro.serve.server import IRLIServer
     mut, queries = _mutated_index(seed=4)
-    want, _ = mut.search(queries, m=M_PROBE, tau=1, k=K_TOP, mode="compact")
-    server = IRLIServer(mut, m=M_PROBE, tau=1, k=K_TOP, mode="compact",
-                        max_batch=16, max_wait_ms=5.0)
+    sp = SearchParams(m=M_PROBE, tau=1, k=K_TOP, mode="compact")
+    want = mut.search(queries, sp)
+    server = IRLIServer(mut, params=sp, max_batch=16, max_wait_ms=5.0)
     try:
         futs = [server.submit(q) for q in queries]
-        got = np.stack([f.result(timeout=120) for f in futs])
+        got = [f.result(timeout=120) for f in futs]
     finally:
         server.close()
-    np.testing.assert_array_equal(np.asarray(want), got)
+    np.testing.assert_array_equal(np.asarray(want.ids),
+                                  np.stack([r.ids for r in got]))
+    assert all(r.mode == "compact" for r in got)
 
 
 # ----------------------------------------------------- no [Q, L] guarantee --
@@ -237,7 +242,8 @@ def test_dense_does_materialize_QL():
 def test_local_search_compact_never_materializes_QL():
     idx, base, queries, tomb = _ql_fixture()
     fn = lambda p, mem, b, q: local_search(
-        p, mem, b, q, m=M_PROBE, tau=1, k=K_TOP, mode="compact", topC=32,
-        tombstone=tomb)
+        p, mem, b, q, SearchParams(m=M_PROBE, tau=1, k=K_TOP,
+                                   mode="compact", topC=32),
+        tombstone=tomb).ids
     args = (idx.params, idx.index.members, base, queries)
     assert not _materializes_QL(fn, args, QL_N_QUERIES, QL_L)

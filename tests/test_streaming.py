@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
 from repro.data.synthetic import clustered_ann, _topk_l2
 from repro.stream import MutableIRLIIndex
 
@@ -42,10 +43,10 @@ def _fresh(fitted, data, **kw):
 
 def _self_recall(index, vecs, ids, k=10, **kw):
     """Fraction of vecs whose own id is retrieved by querying the vec."""
-    got, _ = (index.search(vecs, m=M_PROBE, tau=1, k=k, **kw)
-              if isinstance(index, MutableIRLIIndex)
-              else index.search(vecs, kw["base"], m=M_PROBE, tau=1, k=k))
-    got = np.asarray(got)
+    sp = SearchParams(m=M_PROBE, tau=1, k=k)
+    res = (index.search(vecs, sp) if isinstance(index, MutableIRLIIndex)
+           else index.search(vecs, kw["base"], sp))
+    got = np.asarray(res.ids)
     return float(np.mean([ids[i] in got[i] for i in range(len(ids))]))
 
 
@@ -73,14 +74,16 @@ def test_end_to_end_streaming_demo(data, fitted):
     stream_recall = _self_recall(mut, new_vecs, ids)
     assert stream_recall >= base_recall, (stream_recall, base_recall)
 
-    res_pre, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
-    res_pre = np.asarray(res_pre)
+    sp = SearchParams(m=M_PROBE, tau=1, k=10)
+    pre = mut.search(data.queries, sp)
+    res_pre = np.asarray(pre.ids)
+    assert pre.epoch == mut.epoch
     assert not np.isin(res_pre, del_ids).any()
 
     mut.compact()
-    res_post, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
-    np.testing.assert_array_equal(res_pre, np.asarray(res_post))
-    assert not np.isin(np.asarray(res_post), del_ids).any()
+    post = mut.search(data.queries, sp)
+    np.testing.assert_array_equal(res_pre, np.asarray(post.ids))
+    assert not np.isin(np.asarray(post.ids), del_ids).any()
     # inserted items still retrievable post-compaction
     assert _self_recall(mut, new_vecs, ids) >= base_recall
 
@@ -89,8 +92,8 @@ def test_insert_is_immediately_visible(data, fitted):
     mut = _fresh(fitted, data)
     one = data.base[N_INIT:N_INIT + 1]
     (new_id,) = mut.insert(one)
-    ids, _ = mut.search(one, m=M_PROBE, tau=1, k=5)
-    assert new_id in np.asarray(ids)[0]
+    res = mut.search(one, SearchParams(m=M_PROBE, tau=1, k=5))
+    assert new_id in np.asarray(res.ids)[0]
 
 
 def test_delete_then_query_exclusion(data, fitted):
@@ -99,8 +102,8 @@ def test_delete_then_query_exclusion(data, fitted):
     top1 = np.asarray(_topk_l2(data.base[:N_INIT], data.queries, 1,
                                "angular"))[:, 0]
     mut.delete(top1)
-    ids, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
-    assert not np.isin(np.asarray(ids), top1).any()
+    res = mut.search(data.queries, SearchParams(m=M_PROBE, tau=1, k=10))
+    assert not np.isin(np.asarray(res.ids), top1).any()
     # idempotent: deleting again is a no-op
     assert mut.delete(top1) == 0
 
@@ -109,22 +112,22 @@ def test_compaction_idempotent_and_exact(data, fitted):
     mut = _fresh(fitted, data)
     mut.insert(data.base[N_INIT:])
     mut.delete(np.arange(40))
-    ref, _ = mut.search(data.queries, m=M_PROBE, tau=2, k=10)
-    ref = np.asarray(ref)
+    sp2 = SearchParams(m=M_PROBE, tau=2, k=10)
+    ref = np.asarray(mut.search(data.queries, sp2).ids)
     e0 = mut.epoch
     mut.compact()
     assert mut.epoch == e0 + 1
     snap1 = mut.snapshot
-    out1, _ = mut.search(data.queries, m=M_PROBE, tau=2, k=10)
-    np.testing.assert_array_equal(ref, np.asarray(out1))
+    out1 = mut.search(data.queries, sp2)
+    np.testing.assert_array_equal(ref, np.asarray(out1.ids))
     mut.compact()   # compacting a compacted index changes nothing
     snap2 = mut.snapshot
     np.testing.assert_array_equal(np.asarray(snap1.members),
                                   np.asarray(snap2.members))
     np.testing.assert_array_equal(np.asarray(snap1.load),
                                   np.asarray(snap2.load))
-    out2, _ = mut.search(data.queries, m=M_PROBE, tau=2, k=10)
-    np.testing.assert_array_equal(ref, np.asarray(out2))
+    out2 = mut.search(data.queries, sp2)
+    np.testing.assert_array_equal(ref, np.asarray(out2.ids))
 
 
 def test_load_counters_track_liveness(data, fitted):
@@ -159,7 +162,8 @@ def test_checkpoint_roundtrip(tmp_path, data, fitted):
     mut = _fresh(fitted, data)
     mut.insert(data.base[N_INIT:])
     mut.delete(np.arange(25))
-    ref, _ = mut.search(data.queries, m=M_PROBE, tau=1, k=10)
+    sp = SearchParams(m=M_PROBE, tau=1, k=10)
+    ref = mut.search(data.queries, sp).ids
 
     cm = CheckpointManager(str(tmp_path), keep=2)
     mut.save(cm, step=7)
@@ -168,15 +172,15 @@ def test_checkpoint_roundtrip(tmp_path, data, fitted):
     assert step == 7
     restored.load_state(tree, manifest["extra"])
     assert restored.n_total == mut.n_total and restored.epoch == mut.epoch
-    out, _ = restored.search(data.queries, m=M_PROBE, tau=1, k=10)
-    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    out = restored.search(data.queries, sp)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out.ids))
 
 
 def test_server_streaming_admission(data, fitted):
     from repro.serve.server import IRLIServer
     mut = _fresh(fitted, data)
-    server = IRLIServer(mut, m=M_PROBE, tau=1, k=5, max_batch=16,
-                        max_wait_ms=5.0)
+    server = IRLIServer(mut, params=SearchParams(m=M_PROBE, tau=1, k=5),
+                        max_batch=16, max_wait_ms=5.0)
     try:
         futs = [server.submit(data.queries[i]) for i in range(10)]
         ins = server.insert(data.base[N_INIT:N_INIT + 20])
@@ -184,10 +188,13 @@ def test_server_streaming_admission(data, fitted):
         new_ids = ins.result(timeout=120)
         assert list(new_ids) == list(range(N_INIT, N_INIT + 20))
         for f in futs:
-            assert f.result(timeout=120).shape == (5,)
-        # queries submitted AFTER the insert see the inserted items
+            assert f.result(timeout=120).ids.shape == (5,)
+        # queries submitted AFTER the insert see the inserted items (and
+        # report the post-mutation snapshot epoch)
         for j, f in enumerate(more):
-            assert N_INIT + j in np.asarray(f.result(timeout=120))
+            res = f.result(timeout=120)
+            assert N_INIT + j in np.asarray(res.ids)
+            assert res.epoch >= 1
         deleted = server.delete(np.asarray([N_INIT])).result(timeout=120)
         assert deleted == 1
         assert server.stats["mutations"] == 2
@@ -198,7 +205,8 @@ def test_server_streaming_admission(data, fitted):
 
 def test_server_rejects_mutation_on_frozen_index(data, fitted):
     from repro.serve.server import IRLIServer
-    server = IRLIServer(fitted, m=M_PROBE, tau=1, k=5, base=data.base[:N_INIT])
+    server = IRLIServer(fitted, params=SearchParams(m=M_PROBE, tau=1, k=5),
+                        base=data.base[:N_INIT])
     try:
         with pytest.raises(TypeError):
             server.insert(data.base[N_INIT:N_INIT + 2]).result(timeout=60)
@@ -214,14 +222,13 @@ def test_distributed_local_search_honors_delta_and_tombstone(data, fitted):
     mut.insert(data.base[N_INIT:])
     mut.delete(np.arange(10))
     s = mut.snapshot
-    ids, _ = local_search(mut.params, s.members, s.vecs, data.queries[:8],
-                          m=M_PROBE, tau=1, k=10,
-                          delta_members=s.delta.members, tombstone=s.tombstone)
-    ids = np.asarray(ids)
-    assert not np.isin(ids, np.arange(10)).any()
+    res = local_search(mut.params, s.members, s.vecs, data.queries[:8],
+                       SearchParams(m=M_PROBE, tau=1, k=10),
+                       delta_members=s.delta.members, tombstone=s.tombstone)
+    assert not np.isin(np.asarray(res.ids), np.arange(10)).any()
     # an inserted item is findable through the raw shard path too
     one = data.base[N_INIT:N_INIT + 1]
-    got, _ = local_search(mut.params, s.members, s.vecs, one, m=M_PROBE,
-                          tau=1, k=5, delta_members=s.delta.members,
-                          tombstone=s.tombstone)
-    assert N_INIT in np.asarray(got)[0]
+    got = local_search(mut.params, s.members, s.vecs, one,
+                       SearchParams(m=M_PROBE, tau=1, k=5),
+                       delta_members=s.delta.members, tombstone=s.tombstone)
+    assert N_INIT in np.asarray(got.ids)[0]

@@ -84,11 +84,15 @@ def test_recall_improves_over_rounds(ann_data):
 
 
 def test_search_returns_true_neighbors(fitted_index, ann_data):
+    from repro.core.search_api import SearchParams, SearchResult
     idx, _ = fitted_index
-    ids, ncand = idx.search(ann_data.queries, ann_data.base, m=6, tau=1, k=10)
-    hits = (np.asarray(ids)[:, :, None] == ann_data.gt[:, None, :]).any((1, 2))
+    res = idx.search(ann_data.queries, ann_data.base,
+                     SearchParams(m=6, tau=1, k=10))
+    assert isinstance(res, SearchResult) and res.epoch == 0
+    hits = (np.asarray(res.ids)[:, :, None]
+            == ann_data.gt[:, None, :]).any((1, 2))
     assert hits.mean() > 0.5
-    assert ids.shape == (120, 10)
+    assert res.ids.shape == (120, 10) and res.scores.shape == (120, 10)
 
 
 def test_frequency_filter_reduces_candidates(fitted_index, ann_data):
