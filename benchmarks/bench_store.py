@@ -1,0 +1,128 @@
+"""Quantized tiered store vs fp32 payload: recall parity, bytes, latency.
+
+For each corpus size: fit one IRLI index, then serve the SAME queries
+through the compact pipeline with four vector payloads —
+
+  fp32        raw base array (the pre-store serving path; baseline)
+  int8+exact  int8 block-scaled codes, fp32 exact tier for the k' refine
+  int8        int8 codes, on-the-fly dequant refine (the deep1b deployment)
+  bf16        bf16 codes, dequant refine
+
+— and report end-to-end recall10@10 against true neighbors, the fraction
+of queries whose top-k id set matches the fp32 path exactly, resident
+payload bytes (codes+scales vs fp32), and per-query rerank latency.
+
+Emits artifacts/BENCH_store.json with every row (CI smoke runs
+``--toy``); also registered in benchmarks/run.py.
+"""
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import IRLIIndex, IRLIConfig
+from repro.core.search_api import SearchParams
+from repro.data.synthetic import clustered_ann
+from repro.store import encode
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _recall_of_ids(ids, gt):
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    k = min(ids.shape[1], gt.shape[1])
+    return float(np.mean([
+        len(set(r[r >= 0]) & set(g[:k])) / k for r, g in zip(ids, gt)]))
+
+
+def _id_set_match(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return float(np.mean([set(r[r >= 0]) == set(s[s >= 0])
+                          for r, s in zip(a, b)]))
+
+
+def run(csv=True, toy=False):
+    sizes = ((1000, 32),) if toy else ((2000, 64), (8000, 128))
+    n_queries = 100 if toy else 200
+    rows, records = [], []
+    for L, B_ in sizes:
+        data = clustered_ann(n_base=L, n_queries=n_queries, d=16,
+                             n_clusters=L // 20, seed=0)
+        cfg = IRLIConfig(d=16, n_labels=L, n_buckets=B_, n_reps=4,
+                         d_hidden=64, K=8, rounds=1 if toy else 2,
+                         epochs_per_round=2 if toy else 3,
+                         batch_size=512, lr=2e-3, seed=1)
+        idx = IRLIIndex(cfg)
+        idx.fit(data.train_queries, data.train_gt, label_vecs=data.base)
+        queries = jnp.asarray(data.queries)
+        base = np.asarray(data.base, np.float32)
+
+        sp = SearchParams(mode="compact", m=4, tau=1, k=10, topC=1024)
+        payloads = {
+            "fp32": (jnp.asarray(base), sp),
+            "int8+exact": (encode(base, "int8", 16, keep_exact=True),
+                           sp.replace(store_dtype="int8", refine_k=64)),
+            "int8": (encode(base, "int8", 16),
+                     sp.replace(store_dtype="int8", refine_k=64)),
+            "bf16": (encode(base, "bf16"),
+                     sp.replace(store_dtype="bf16", refine_k=64)),
+        }
+        fp32_ids = None
+        for tag, (payload, p) in payloads.items():
+            res = idx.search(queries, payload, p)
+            res.ids.block_until_ready()
+            t0 = time.time()
+            for _ in range(3):
+                idx.search(queries, payload, p).ids.block_until_ready()
+            us = (time.time() - t0) / (3 * n_queries) * 1e6
+            if fp32_ids is None:
+                fp32_ids = res.ids
+            nbytes = (payload.nbytes() if hasattr(payload, "nbytes")
+                      and callable(payload.nbytes) else L * 16 * 4)
+            rec = {
+                "corpus": L, "payload": tag,
+                "recall10": round(_recall_of_ids(res.ids, data.gt), 4),
+                "match_fp32": round(_id_set_match(fp32_ids, res.ids), 4),
+                "payload_bytes": int(nbytes),
+                "fp32_bytes": L * 16 * 4,
+                "us_per_query": round(us, 1),
+            }
+            records.append(rec)
+            rows.append((
+                f"store/L={L}_{tag}", us,
+                f"recall={rec['recall10']:.3f};match_fp32="
+                f"{rec['match_fp32']:.2f};bytes={rec['payload_bytes']}"))
+
+    os.makedirs(ART, exist_ok=True)
+    out = os.path.join(ART, "BENCH_store.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived}")
+
+    # smoke gates (CI runs --toy): the exact-tier deployment must match
+    # fp32 results (refine is exact), the dequant-refine deployments may
+    # trade a little recall for the 3x+ payload saving — bounded here
+    by = {(r["corpus"], r["payload"]): r for r in records}
+    for (L, tag), r in by.items():
+        if tag == "int8+exact":
+            assert r["match_fp32"] >= 0.95, r
+        if tag.startswith("int8"):
+            assert r["payload_bytes"] * 3 < r["fp32_bytes"], r
+        base_rec = by[(L, "fp32")]["recall10"]
+        slack = 0.002 if tag == "int8+exact" else 0.05
+        assert r["recall10"] >= base_rec - slack, (r, base_rec)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--toy", action="store_true",
+                    help="small corpus for the CI smoke step")
+    args = ap.parse_args()
+    run(toy=args.toy)

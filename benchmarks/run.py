@@ -14,6 +14,8 @@ BENCHES = [
     ("recall_candidates", "benchmarks.bench_recall_candidates", "paper Fig 3"),
     ("compact_vs_dense", "benchmarks.bench_compact_vs_dense",
      "pipeline recall parity + memory crossover"),
+    ("store", "benchmarks.bench_store",
+     "quantized tiered store: recall parity + bytes + rerank latency"),
     ("iterations", "benchmarks.bench_iterations", "paper Fig 4 / Table 4"),
     ("xml", "benchmarks.bench_xml", "paper Tables 1-2"),
     ("distributed", "benchmarks.bench_distributed", "paper Figs 5-6"),

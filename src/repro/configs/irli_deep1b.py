@@ -7,7 +7,8 @@ Mapping (DESIGN §3/§5): the paper's P=8 corpus shards generalize to the full
 (sharded over "model" -> 2 reps/chip column). Cells:
 
   train_scorers   scorer BCE train step on 1M-query batches (train)
-  serve_query     sharded multiprobe search, batch 4096 queries (serve)
+  serve_query     sharded multiprobe search, batch 4096 queries, int8
+                  tiered vector store (serve) — the store's first consumer
 
 These two extra cells put the paper's actual workload on the production mesh
 alongside the 40 assigned-architecture cells.
@@ -30,6 +31,12 @@ HIDDEN = 1024
 N_CORPUS = 1 << 27           # 134,217,728 (assigned 100M padded to 2^27)
 K_NEIGH = 100                 # paper: 100 exact NNs as labels
 MAX_LOAD = 2 * (N_CORPUS // (256 * B_BUCKETS))  # per-shard bucket load bound
+# quantized tiered store (docs/store.md): fp32 base vectors are 2^27·96·4
+# ≈ 51.5 GB — unservable; int8 block-scaled codes + per-32-block scales are
+# ~3.7x smaller and the serve cell declares THEM as its vector payload
+STORE_DTYPE = "int8"
+STORE_BLOCK = 32
+N_SCALE_BLOCKS = D // STORE_BLOCK
 
 SCORER_CFG = ScorerConfig(d_in=D, d_hidden=HIDDEN, n_buckets=B_BUCKETS,
                           n_reps=R, loss="softmax_bce")
@@ -79,6 +86,20 @@ def _mesh_size(mesh) -> int:
     return out
 
 
+def serve_store_bytes(n_shards: int) -> dict:
+    """Per-shard byte accounting of the serve cell's vector payload —
+    asserted by launch/dryrun.py against the compiled cell's argument
+    sizes, so the config can't silently regress to fp32 vectors."""
+    l_loc = N_CORPUS // n_shards
+    return {
+        "l_loc": l_loc,
+        "fp32_per_shard": l_loc * D * 4,
+        "int8_per_shard": l_loc * D * 1 + l_loc * N_SCALE_BLOCKS * 4,
+        "members_per_shard": R * B_BUCKETS
+        * (2 * max(1, l_loc // B_BUCKETS)) * 4,
+    }
+
+
 def _serve_cell() -> CellDef:
     QBATCH = 4096
 
@@ -89,7 +110,10 @@ def _serve_cell() -> CellDef:
         return {
             "scorer": _abstract_params(),
             "members": sds((n_shards, R, B_BUCKETS, max_load), jnp.int32),
-            "base": sds((n_shards, l_loc, D)),
+            # the int8 tiered store IS the declared vector payload: no fp32
+            # base array exists anywhere in the serve cell
+            "base_codes": sds((n_shards, l_loc, D), jnp.int8),
+            "base_scales": sds((n_shards, l_loc, N_SCALE_BLOCKS)),
         }
 
     def param_specs(mesh, params_sds):
@@ -97,7 +121,8 @@ def _serve_cell() -> CellDef:
         return {
             "scorer": jax.tree.map(lambda _: P(), params_sds["scorer"]),
             "members": P(axes, None, None, None),
-            "base": P(axes, None, None),
+            "base_codes": P(axes, None, None),
+            "base_scales": P(axes, None, None),
         }
 
     return CellDef(
@@ -105,10 +130,13 @@ def _serve_cell() -> CellDef:
         inputs=lambda mesh: {"queries": sds((QBATCH, D))},
         in_specs=lambda mesh: {"queries": P()},
         params=params_for, param_specs=param_specs,
-        step=lambda mesh: S.build_irli_serve(mesh, m=5, tau=2, k=10),
+        step=lambda mesh: S.build_irli_serve(
+            mesh, m=5, tau=2, k=10, store_dtype=STORE_DTYPE,
+            store_block=STORE_BLOCK),
         step_with_mesh=True,
         note="every chip = one paper node; sorted-frequency candidate path; "
-             "single [Q,P*k] all_gather merge")
+             "int8 block-scaled store + fp32 refine of the top-k' "
+             "survivors; single [Q,P*k] all_gather merge")
 
 
 def get_arch() -> ArchDef:

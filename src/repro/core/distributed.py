@@ -22,6 +22,12 @@ schedule is explicit (one all_gather of k floats + ids and one [Q] psum per
 query — nothing else crosses shards). The same function lowers on the
 512-device production mesh in launch/dryrun.py (arch id: the paper's own
 "irli-deep1b" config).
+
+Every surface accepts the per-shard ``base`` as either the raw fp32
+[L_loc, d] corpus or a ``repro.store.QuantizedStore`` over the same rows
+(docs/store.md): each shard then scores gathered CODE rows and refines the
+k' coarse survivors at fp32 BEFORE the psum'd merge — the int8 tier is what
+lets the deep1b corpus (2^27 × 96-d) fit per-shard HBM at all.
 """
 from __future__ import annotations
 
@@ -58,12 +64,30 @@ def _local_arrays(scorer_params, members, base_shard, queries,
                   params: SearchParams, delta_members, tombstone,
                   cache: SA.PipelineCache | None):
     """Shard-local search -> raw (ids, scores, n_cand) arrays. ``params``
-    must already be resolved. Usable inside shard_map/lax.map traces (the
-    cached jitted fn inlines)."""
+    must already be resolved; ``base_shard`` is this shard's raw [L_loc, d]
+    corpus or a QuantizedStore over it (so each shard scores CODE rows
+    before the merge). Usable inside shard_map/lax.map traces (the cached
+    jitted fn inlines)."""
     cache = cache if cache is not None else SA.DEFAULT_CACHE
+    SA.check_store("distributed search", params, base_shard)
     fn = cache.get(params, base_shard.shape[0], queries.shape[0])
     return fn(scorer_params, members, base_shard, queries, delta_members,
               tombstone)
+
+
+def _strip_block(tree):
+    """Drop the size-1 shard-leading block dim shard_map leaves on sharded
+    inputs — works for raw arrays and QuantizedStore pytrees alike."""
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def _base_specs(base, axes):
+    """Per-leaf PartitionSpecs sharding ``base`` (array or QuantizedStore)
+    over ``axes``: every leaf's LEADING (corpus) dim is sharded over the
+    joint axes, the rest replicated."""
+    axes = tuple(axes)
+    dim0 = axes[0] if len(axes) == 1 else axes
+    return jax.tree.map(lambda x: P(dim0, *((None,) * (x.ndim - 1))), base)
 
 
 def local_search(scorer_params, members, base_shard, queries,
@@ -150,10 +174,11 @@ def make_distributed_search(mesh: Mesh, params: SearchParams | None = None, *,
     def sharded(scorer_params, members, base, queries):
         # strip the size-1 shard-leading block dim shard_map leaves on the
         # sharded inputs (params [1,R,...], members [1,R,B,ML], base
-        # [1,L_loc,d]); queries are replicated and arrive full
-        scorer_params = jax.tree.map(lambda x: x[0], scorer_params)
+        # [1,L_loc,d] — or the same leading dim on every QuantizedStore
+        # leaf); queries are replicated and arrive full
+        scorer_params = _strip_block(scorer_params)
         members = members[0]
-        base = base[0]
+        base = _strip_block(base)
         # shard-local search (compact mode keeps the per-shard work O(topC)
         # per query ahead of the tiny all_gather merge)
         r = _resolve(sp, base.shape[0], queries.shape[0])
@@ -164,16 +189,18 @@ def make_distributed_search(mesh: Mesh, params: SearchParams | None = None, *,
         gids = jnp.where(ids >= 0, ids + axis_index * base.shape[0], -1)
         return _merge_across_shards(gids, scores, n_cand, sp.k, corpus_axes)
 
-    mapped = _shard_map(
-        sharded, mesh=mesh,
-        in_specs=(P(*(corpus_axes + (None,))),   # params leading shard axis
-                  P(*(corpus_axes + (None, None, None))),   # members [P,R,B,ML]
-                  P(*(corpus_axes + (None, None))),         # base [P,Lloc,d]
-                  P()),                                      # queries replicated
-        out_specs=(P(), P(), P()),
-        **_SM_KW)
-
     def search(scorer_params, members, base, queries):
+        # in_specs depend on the base payload's pytree structure (raw array
+        # vs QuantizedStore leaves), so the shard_map is built per call —
+        # the jit cache downstream still keys on structure, not identity
+        mapped = _shard_map(
+            sharded, mesh=mesh,
+            in_specs=(P(*(corpus_axes + (None,))),  # params leading shard axis
+                      P(*(corpus_axes + (None, None, None))),  # members
+                      _base_specs(base, corpus_axes),
+                      P()),                                # queries replicated
+            out_specs=(P(), P(), P()),
+            **_SM_KW)
         ids, scores, n_cand = mapped(scorer_params, members, base, queries)
         if legacy:
             return ids, scores
@@ -202,7 +229,9 @@ def shard_search_local(scorer_params, members, base_shard, queries,
     """100M-scale per-shard search: compact pipeline + query chunking.
 
     Every chip is one of the paper's "nodes": it owns base_shard [L_loc, d]
-    and a full R-rep inverted index over those L_loc vectors. No [Q, L]
+    (raw fp32 or a QuantizedStore — with ``params.store_dtype="int8"`` the
+    shard reranks on code rows and never holds fp32 vectors) and a full
+    R-rep inverted index over those L_loc vectors. No [Q, L]
     table is ever built — candidates stay compact:
       scorer top-m -> member gather [Q, R*m*ML] -> sort+run-length count
       -> top-C frequent -> gather vectors -> true-distance top-k.
@@ -278,7 +307,7 @@ def make_production_search(mesh: Mesh, params: SearchParams | None = None, *,
 
     def local(scorer_params, members, base, queries):
         members = members[0]          # strip the shard-leading dim
-        base = base[0]
+        base = _strip_block(base)     # raw array or QuantizedStore leaves
         r = _resolve(sp, base.shape[0], queries.shape[0], force_compact=True)
         ids, scores, n_cand = _local_arrays(scorer_params, members, base,
                                             queries, r, None, None, cache)
@@ -287,13 +316,13 @@ def make_production_search(mesh: Mesh, params: SearchParams | None = None, *,
         gids = jnp.where(ids >= 0, ids + shard * base.shape[0], -1)
         return _merge_across_shards(gids, scores, n_cand, sp.k, axes)
 
-    mapped = _shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), P(axes, None, None, None), P(axes, None, None), P()),
-        out_specs=(P(), P(), P()),
-        **_SM_KW)
-
     def search(scorer_params, members, base, queries):
+        mapped = _shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(axes, None, None, None),
+                      _base_specs(base, axes), P()),
+            out_specs=(P(), P(), P()),
+            **_SM_KW)
         ids, scores, n_cand = mapped(scorer_params, members, base, queries)
         if legacy:
             return ids, scores

@@ -170,6 +170,11 @@ class IRLIIndex:
         Typed path: ``search(queries, base, SearchParams(...))`` ->
         :class:`~repro.core.search_api.SearchResult` (ids [Q, k] with -1
         pad, scores, per-query survivor counts, epoch=0, resolved mode).
+        ``base`` is the raw fp32 [L, d] corpus or a
+        ``repro.store.QuantizedStore`` over it — encode once with
+        ``repro.store.encode(base, "int8")`` and pass
+        ``SearchParams(store_dtype="int8")`` for the tiered
+        coarse-on-codes + exact-refine rerank (docs/store.md).
         The jitted pipeline comes from ``cache`` (default: the process-wide
         ``search_api.DEFAULT_CACHE``), so equal params + shapes never
         recompile.
@@ -193,8 +198,10 @@ class IRLIIndex:
     def _search_typed(self, queries, base, params: SA.SearchParams,
                       cache: SA.PipelineCache | None) -> SA.SearchResult:
         cache = cache if cache is not None else SA.DEFAULT_CACHE
+        if not hasattr(base, "codes"):        # raw corpus; stores pass as-is
+            base = jnp.asarray(base)
         return cache.search(params, self.params, self.index.members,
-                            jnp.asarray(base), jnp.asarray(queries))
+                            base, jnp.asarray(queries))
 
     def as_searcher(self, base, cache: SA.PipelineCache | None = None
                     ) -> SA.Searcher:

@@ -18,6 +18,13 @@ compact— per-query sort of the gathered candidate ids + run-length count +
 ``QueryPipeline.make(L, mode="auto")`` picks the backend from the corpus
 size and a dense-table memory budget. Both backends return identical top-k
 ids at matched candidate budgets (tests/test_query_pipeline.py).
+
+The rerank's vector payload is pluggable: ``base`` may be a raw fp32
+[L, d] array or a ``repro.store.QuantizedStore`` (int8/bf16 block-scaled
+codes + optional exact fp32 tier, docs/store.md) — with a quantized store
+the compact rerank runs coarse-on-codes + exact refine of the top
+``refine_k`` survivors and never materializes an fp32 [L, d] or
+[Q, topC, d] array.
 """
 from __future__ import annotations
 
@@ -139,6 +146,39 @@ def frequency_topC(cands: jnp.ndarray, C: int):
     return frequent_topc(cands, C=C)
 
 
+def pairwise_sim(queries, base, metric: str = "angular"):
+    """Similarity of every query against every base row: [Q, d]×[L, d] ->
+    [Q, L] fp32 (dot product for angular, negative squared L2 otherwise).
+    The ONE implementation of the metric: every rerank path — full-matrix
+    (dense), gathered (compact, via :func:`gathered_sim`), the store's
+    exact refine stage, and the distance_topk kernel oracle — routes here
+    so numerics can't diverge."""
+    if metric == "angular":
+        return jnp.einsum("qd,ld->ql", queries, base,
+                          preferred_element_type=jnp.float32)
+    return -(jnp.sum(queries ** 2, 1, keepdims=True)
+             - 2 * queries @ base.T + jnp.sum(base ** 2, 1)[None, :])
+
+
+def gathered_sim(queries, vecs, metric: str = "angular"):
+    """The metric for PER-QUERY gathered rows: queries [Q, d], vecs
+    [Q, C, d] -> [Q, C] fp32 — the single implementation behind every
+    gathered rerank (compact path, store refine), defined HERE next to
+    pairwise_sim so the two can't drift.
+
+    angular is a vmap of pairwise_sim. l2 uses the direct difference form
+    -Σ(q-v)²: pairwise_sim's expansion (|q|² - 2q·v + |v|²) is forced by
+    its full-matrix shape but cancels catastrophically at large norms
+    (fp32 ulp of |q|² can exceed the distance gap between near-duplicate
+    rows) — the gathered stage is the EXACT final rerank and must resolve
+    those ties correctly."""
+    if metric == "l2":
+        return -jnp.sum((queries[:, None, :] - vecs.astype(jnp.float32)) ** 2,
+                        axis=-1)
+    return jax.vmap(lambda q, v: pairwise_sim(q[None], v, metric)[0])(
+        queries, vecs)
+
+
 def rerank_gathered(queries, base, cand_ids, cand_counts, tau: int, k: int,
                     metric: str = "angular"):
     """Re-rank a COMPACT candidate list: gather base rows by id and score.
@@ -149,30 +189,13 @@ def rerank_gathered(queries, base, cand_ids, cand_counts, tau: int, k: int,
     valid = (cand_ids >= 0) & (cand_counts >= tau)
     safe = jnp.maximum(cand_ids, 0)
     vecs = base[safe]                                           # [Q, C, d]
-    if metric == "angular":
-        sim = jnp.einsum("qd,qcd->qc", queries, vecs,
-                         preferred_element_type=jnp.float32)
-    else:
-        sim = -jnp.sum((queries[:, None, :] - vecs.astype(jnp.float32)) ** 2,
-                       axis=-1)
-    sim = jnp.where(valid, sim, -jnp.inf)
+    sim = jnp.where(valid, gathered_sim(queries, vecs, metric), -jnp.inf)
     scores, pos = jax.lax.top_k(sim, k)
     ids = jnp.take_along_axis(cand_ids, pos, axis=1)
-    # a -inf slot means NO candidate survived there — emit -1, never an
+    # a -inf slot means NO candidate survived there — whether the slot was
+    # empty (id -1) or a whole row fell below tau — emit -1, never an
     # arbitrary (possibly tombstoned) id
     return jnp.where(jnp.isfinite(scores), ids, -1), scores
-
-
-def pairwise_sim(queries, base, metric: str = "angular"):
-    """Similarity of every query against every base row: [Q, d]×[L, d] ->
-    [Q, L] fp32 (dot product for angular, negative squared L2 otherwise).
-    The ONE implementation of the metric used by every full-matrix rerank
-    path (frozen, streaming, per-shard) so numerics can't diverge."""
-    if metric == "angular":
-        return jnp.einsum("qd,ld->ql", queries, base,
-                          preferred_element_type=jnp.float32)
-    return -(jnp.sum(queries ** 2, 1, keepdims=True)
-             - 2 * queries @ base.T + jnp.sum(base ** 2, 1)[None, :])
 
 
 def rerank(queries, base, cand_mask, k: int, metric: str = "angular"):
@@ -194,12 +217,21 @@ DENSE_TABLE_BUDGET_BYTES = 64 << 20   # default cap on the [Q, L] fp32 tables
 
 
 def select_mode(L: int, q_batch: int = 512,
-                budget_bytes: int = DENSE_TABLE_BUDGET_BYTES) -> str:
+                budget_bytes: int = DENSE_TABLE_BUDGET_BYTES,
+                store_dtype: str = "fp32") -> str:
     """Pick the frequency/rerank backend from the per-shard corpus size.
 
     dense materializes two [q_batch, L] fp32 tables (counts + similarities);
     compact's intermediates are O(q_batch · C0). Returns "dense" while the
-    tables fit the budget, else "compact"."""
+    tables fit the budget, else "compact".
+
+    The accounting is CODE bytes, not fp32 bytes: a quantized store
+    (``store_dtype`` != "fp32") holds int8/bf16 codes, and dense's
+    full-matrix rerank would have to decode the whole [L, D] corpus back
+    to fp32 — exactly the array the store exists to never materialize —
+    so auto always resolves compact for quantized stores."""
+    if store_dtype != "fp32":
+        return "compact"
     return "dense" if 2 * q_batch * L * 4 <= budget_bytes else "compact"
 
 
@@ -217,6 +249,14 @@ class QueryPipeline:
     jaxpr) — candidates stay [Q, topC] from frequency counting to the final
     top-k. n_candidates is therefore capped at ``topC`` in compact mode,
     while dense counts every survivor.
+
+    ``store_dtype`` selects the vector-payload tier (docs/store.md): "fp32"
+    reranks gathered raw rows (bit-identical whether ``base`` is an array
+    or a fp32 QuantizedStore); "int8"/"bf16" run the tiered two-stage
+    rerank — coarse on gathered CODE rows, exact fp32 refine of the top
+    ``refine_k`` survivors (0 = auto: max(4k, 32)) — and additionally
+    guarantee no fp32 [L, D] or [Q, topC, D] intermediate exists
+    (tests/test_store.py walks the jaxpr).
     """
     m: int = 5
     tau: int = 1
@@ -224,6 +264,8 @@ class QueryPipeline:
     mode: str = "compact"          # "dense" | "compact"
     topC: int = 1024               # compact candidate budget per query
     metric: str = "angular"
+    store_dtype: str = "fp32"      # "fp32" | "int8" | "bf16" (docs/store.md)
+    refine_k: int = 0              # exact-refine depth k' (0 = auto)
     # no loss_kind: bucket selection works on raw logits, which give the
     # same top-m as softmax OR sigmoid probabilities (both monotone) — the
     # training loss is irrelevant at serve time
@@ -232,14 +274,22 @@ class QueryPipeline:
         if self.mode not in ("dense", "compact"):
             raise ValueError(f"unknown pipeline mode {self.mode!r} "
                              "(use 'dense', 'compact', or make(mode='auto'))")
+        if self.store_dtype not in ("fp32", "int8", "bf16"):
+            raise ValueError(f"unknown store_dtype {self.store_dtype!r} "
+                             "(use 'fp32', 'int8', or 'bf16')")
+        if self.mode == "dense" and self.store_dtype != "fp32":
+            raise ValueError(
+                "mode='dense' requires store_dtype='fp32' — the dense "
+                "rerank would decode the whole [L, D] store back to fp32")
 
     @classmethod
     def make(cls, L: int, *, mode: str = "auto", q_batch: int = 512,
              budget_bytes: int = DENSE_TABLE_BUDGET_BYTES, **kw):
         """Build a pipeline, resolving mode="auto" from L and the memory
-        budget (see :func:`select_mode`)."""
+        budget (see :func:`select_mode`; quantized stores always compact)."""
         if mode == "auto":
-            mode = select_mode(L, q_batch, budget_bytes)
+            mode = select_mode(L, q_batch, budget_bytes,
+                               kw.get("store_dtype", "fp32"))
         return cls(mode=mode, **kw)
 
     # -------------------------------------------------------------- stages --
@@ -260,20 +310,44 @@ class QueryPipeline:
     def search(self, params, members, base, queries, delta_members=None,
                tombstone=None):
         """Full serving path -> (ids [Q, k] with -1 pad, scores [Q, k],
-        n_candidates [Q]). base rows are indexed by the member ids (a corpus
-        shard or the streaming vector buffer)."""
+        n_candidates [Q]). base rows are indexed by the member ids — a raw
+        [L, d] array (corpus shard / streaming vector buffer) or a
+        :class:`~repro.store.quantized.QuantizedStore` over the same rows.
+        """
+        from repro.store.quantized import QuantizedStore
+        store = base if isinstance(base, QuantizedStore) else None
+        if store is not None and store.dtype != self.store_dtype:
+            raise ValueError(
+                f"pipeline store_dtype={self.store_dtype!r} but the passed "
+                f"store holds {store.dtype!r} codes")
+        if store is None and self.store_dtype != "fp32":
+            raise ValueError(    # never silently "measure" fp32 as quantized
+                f"pipeline store_dtype={self.store_dtype!r} needs a "
+                "QuantizedStore base, got a raw array — encode it first "
+                "(repro.store.encode)")
         cands = self.candidates(params, members, queries, delta_members,
                                 tombstone)
         if self.mode == "compact":
             cid, cnt = frequency_topC(cands, self.topC)
-            ids, scores = rerank_gathered(queries, base, cid, cnt, self.tau,
-                                          self.k, self.metric)
+            if store is not None and store.dtype != "fp32":
+                from repro.store.rerank import rerank_two_stage
+                ids, scores = rerank_two_stage(
+                    queries, store, cid, cnt, tau=self.tau, k=self.k,
+                    refine_k=self.refine_k, metric=self.metric)
+            else:
+                rows = store.codes if store is not None else base
+                ids, scores = rerank_gathered(queries, rows, cid, cnt,
+                                              self.tau, self.k, self.metric)
             n_cand = jnp.sum((cid >= 0) & (cnt >= self.tau), axis=1)
             return ids, scores, n_cand
-        L = base.shape[0]
+        if store is not None and store.dtype != "fp32":   # guarded twice:
+            raise ValueError(                 # __post_init__ catches the
+                "dense mode cannot serve a quantized store")  # config path
+        rows = store.codes if store is not None else base
+        L = rows.shape[0]
         freq = candidate_frequencies_dense(cands, L)
         mask = freq >= self.tau
-        sim = jnp.where(mask, pairwise_sim(queries, base, self.metric),
+        sim = jnp.where(mask, pairwise_sim(queries, rows, self.metric),
                         -jnp.inf)
         scores, ids = jax.lax.top_k(sim, self.k)
         ids = jnp.where(jnp.isfinite(scores), ids, -1)

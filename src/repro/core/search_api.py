@@ -34,6 +34,7 @@ from repro.core import query as Q
 
 _METRICS = ("angular", "l2")
 _MODES = ("auto", "dense", "compact")
+_STORE_DTYPES = ("fp32", "int8", "bf16")   # mirrors store.quantized
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +54,8 @@ class SearchParams:
     topC: int = 1024           # compact-mode candidate budget per query
     metric: str = "angular"    # "angular" | "l2"
     mode: str = "auto"         # "auto" | "dense" | "compact"
+    store_dtype: str = "fp32"  # vector tier: "fp32" | "int8" | "bf16"
+    refine_k: int = 0          # exact-refine depth k' (0 = auto: max(4k,32))
 
     def __post_init__(self):
         for name in ("m", "tau", "k", "topC"):
@@ -66,6 +69,18 @@ class SearchParams:
         if self.mode not in _MODES:
             raise ValueError(f"SearchParams.mode must be one of {_MODES}, "
                              f"got {self.mode!r}")
+        if self.store_dtype not in _STORE_DTYPES:
+            raise ValueError(f"SearchParams.store_dtype must be one of "
+                             f"{_STORE_DTYPES}, got {self.store_dtype!r}")
+        rk = self.refine_k
+        if not isinstance(rk, int) or isinstance(rk, bool) or rk < 0:
+            raise ValueError(
+                f"SearchParams.refine_k must be an int >= 0, got {rk!r}")
+        if self.mode == "dense" and self.store_dtype != "fp32":
+            raise ValueError(
+                "mode='dense' cannot serve a quantized store "
+                f"(store_dtype={self.store_dtype!r}): the dense rerank "
+                "would decode the whole [L, D] corpus back to fp32")
 
     def replace(self, **kw) -> "SearchParams":
         return dataclasses.replace(self, **kw)
@@ -73,10 +88,14 @@ class SearchParams:
     def resolve(self, n_labels: int, q_batch: int = 512) -> "SearchParams":
         """Materialize ``mode="auto"`` against the corpus + batch size (same
         rule as ``query.select_mode``: dense while the [q_batch, n_labels]
-        tables fit the budget). Resolved params are the cache key."""
+        tables fit the budget — accounting CODE bytes: a quantized
+        ``store_dtype`` always resolves compact, since dense would decode
+        the whole store to fp32). Resolved params are the cache key."""
         if self.mode != "auto":
             return self
-        return self.replace(mode=Q.select_mode(n_labels, q_batch))
+        return self.replace(
+            mode=Q.select_mode(n_labels, q_batch,
+                               store_dtype=self.store_dtype))
 
     def pipeline(self) -> Q.QueryPipeline:
         """The QueryPipeline realizing these params. Resolve first."""
@@ -85,7 +104,9 @@ class SearchParams:
                              "pipeline — mode='auto' is not executable")
         return Q.QueryPipeline(m=self.m, tau=self.tau, k=self.k,
                                mode=self.mode, topC=self.topC,
-                               metric=self.metric)
+                               metric=self.metric,
+                               store_dtype=self.store_dtype,
+                               refine_k=self.refine_k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,7 +214,10 @@ class PipelineCache:
                queries, delta_members=None, tombstone=None, *,
                epoch: int = 0) -> SearchResult:
         """Resolve params against this corpus/batch, fetch-or-compile the
-        pipeline, run it, and wrap the typed result."""
+        pipeline, run it, and wrap the typed result. ``base`` is the raw
+        [L, d] corpus or a QuantizedStore over it (checked against
+        ``params.store_dtype``)."""
+        check_store("PipelineCache.search", params, base)
         resolved = params.resolve(int(base.shape[0]), int(queries.shape[0]))
         fn = self.get(resolved, base.shape[0], queries.shape[0])
         ids, scores, n_cand = fn(scorer_params, members, base, queries,
@@ -205,6 +229,27 @@ class PipelineCache:
 #: Process-wide default cache: surfaces that aren't handed a private cache
 #: (e.g. a bare ``idx.search``) all share this one.
 DEFAULT_CACHE = PipelineCache()
+
+
+def check_store(surface: str, params: SearchParams, base) -> None:
+    """Fail fast when the ``store_dtype`` knob and the actual base payload
+    disagree — a mismatch would otherwise surface as a shape/dtype error
+    deep inside the jitted pipeline (or, worse, silently rerank on raw
+    int8 codes as if they were coordinates)."""
+    from repro.store.quantized import (QuantizedStore,    # lazy: no cycle
+                                       check_scales)
+    if isinstance(base, QuantizedStore):
+        check_scales(base)
+        if params.store_dtype != base.dtype:
+            raise ValueError(
+                f"{surface}: params.store_dtype={params.store_dtype!r} but "
+                f"the base store holds {base.dtype!r} codes — build the "
+                f"params with store_dtype={base.dtype!r}")
+    elif params.store_dtype != "fp32":
+        raise ValueError(
+            f"{surface}: params.store_dtype={params.store_dtype!r} needs a "
+            "QuantizedStore base — encode the corpus once with "
+            "repro.store.encode(base, dtype=...) (docs/store.md)")
 
 
 def check_params(surface: str, params) -> SearchParams:

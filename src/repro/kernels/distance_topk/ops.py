@@ -1,5 +1,12 @@
-"""jit'd public wrapper: Pallas on TPU, oracle elsewhere."""
+"""jit'd public wrapper: Pallas on TPU, oracle elsewhere.
+
+Both backends return raw top-k positions; this wrapper pins the shared
+serving contract on top: a slot whose score is not finite had NO surviving
+candidate, and its id must be -1 (never an arbitrary tile position) —
+exactly core/query.rerank_gathered's rule.
+"""
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.distance_topk.distance_topk import distance_topk
 from repro.kernels.distance_topk.ref import distance_topk_ref
@@ -8,6 +15,8 @@ from repro.kernels.distance_topk.ref import distance_topk_ref
 def rerank_topk(queries, base, mask, *, k: int, metric: str = "dot",
                 tq: int = 64, tl: int = 512):
     if jax.default_backend() == "tpu":
-        return distance_topk(queries, base, mask, k=k, metric=metric,
-                             tq=tq, tl=tl)
-    return distance_topk_ref(queries, base, mask, k=k, metric=metric)
+        vals, ids = distance_topk(queries, base, mask, k=k, metric=metric,
+                                  tq=tq, tl=tl)
+    else:
+        vals, ids = distance_topk_ref(queries, base, mask, k=k, metric=metric)
+    return vals, jnp.where(jnp.isfinite(vals), ids, -1)

@@ -1,15 +1,19 @@
-"""Pure-jnp oracle for masked distance + top-k re-rank."""
+"""Pure-jnp oracle for masked distance + top-k re-rank.
+
+The metric itself is core/query.pairwise_sim — the ONE implementation
+every rerank path shares (this oracle used to reimplement dot/l2 inline;
+deduped so kernel parity is checked against the same numerics the jnp
+serving paths produce). The kernel's "dot" metric is query's "angular".
+"""
 import jax
 import jax.numpy as jnp
 
+from repro.core.query import pairwise_sim
+
 
 def distance_topk_ref(queries, base, mask, *, k: int, metric: str = "dot"):
-    sim = jnp.einsum("qd,ld->ql", queries, base,
-                     preferred_element_type=jnp.float32)
-    if metric == "l2":
-        qn = jnp.sum(queries.astype(jnp.float32) ** 2, 1, keepdims=True)
-        bn = jnp.sum(base.astype(jnp.float32) ** 2, 1)[None, :]
-        sim = 2.0 * sim - qn - bn
+    sim = pairwise_sim(queries.astype(jnp.float32), base.astype(jnp.float32),
+                       "l2" if metric == "l2" else "angular")
     sim = jnp.where(mask > 0, sim, -jnp.inf)
     vals, idx = jax.lax.top_k(sim, k)
     return vals, idx.astype(jnp.int32)

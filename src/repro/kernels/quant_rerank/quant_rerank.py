@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused candidate gather + block dequant + similarity +
+running top-k' over quantized code rows.
+
+The coarse stage of the tiered store's two-stage rerank
+(store/rerank.rerank_two_stage): for each query, score its compact candidate
+list against int8 (or bf16) block-scaled code rows and keep the k' best for
+the exact fp32 refine. The jnp path gathers + dequantizes candidate CHUNKS
+through HBM (kernels/quant_rerank/ops.py); this kernel keeps one query tile
+VMEM-resident and streams each candidate's code row through a single fused
+pass:
+
+  1. gather — candidate ids drive dynamic row loads from the HBM-resident
+     ``codes`` [L, D] int8 and ``scales`` [L, D/block] fp32 tables (the
+     embedding_bag scalar-gather pattern); the fp32 row never exists
+     outside VMEM
+  2. dequant — row * repeat(scales, block): one fp32 [D] vector at a time
+  3. score — dot (angular) or negated squared L2 against the query row
+  4. top-k' — one merge of the [TQ, C] score tile against a -inf-seeded
+     accumulator (the iterative-argmax extraction shared with irli_topk,
+     which breaks ties toward the smaller candidate POSITION — exactly
+     jax.lax.top_k's stability, so ids match the jnp oracle ref.py)
+
+Slots with no surviving candidate (id < 0 or count < tau) score -inf and
+emit id -1 — the same contract as core/query.rerank_gathered.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ANY
+from repro.kernels.irli_topk.irli_topk import _topk_merge
+
+
+def _kernel(q_ref, cid_ref, cnt_ref, codes_ref, scales_ref, ids_ref, val_ref,
+            *, C: int, block: int, k: int, tau: int, metric: str):
+    tq = q_ref.shape[0]
+    q = q_ref[...]                                     # [TQ, D] f32
+    cid = cid_ref[...]                                 # [TQ, C] i32
+    cnt = cnt_ref[...]                                 # [TQ, C] f32
+    valid = (cid >= 0) & (cnt >= tau)
+
+    def slot(j, sc):
+        def row(i, sc):
+            rid = jnp.maximum(cid[i, j], 0)
+            crow = pl.load(codes_ref, (pl.dslice(rid, 1), slice(None)))[0]
+            srow = pl.load(scales_ref, (pl.dslice(rid, 1), slice(None)))[0]
+            deq = crow.astype(jnp.float32) * jnp.repeat(srow, block, axis=0)
+            if metric == "l2":
+                s = -jnp.sum((q[i] - deq) ** 2)
+            else:
+                s = jnp.sum(q[i] * deq)
+            return sc.at[i, j].set(s)
+
+        return jax.lax.fori_loop(0, tq, row, sc)
+
+    sc = jnp.zeros((tq, C), jnp.float32)
+    sc = jax.lax.fori_loop(0, C, slot, sc)
+    sc = jnp.where(valid, sc, -jnp.inf)
+
+    seed_v = jnp.full((tq, k), -jnp.inf, jnp.float32)
+    seed_i = jnp.full((tq, k), -1, jnp.int32)
+    new_vals, new_pos, _ = _topk_merge(sc, seed_v, seed_i, k)
+    merged_ids = jnp.concatenate([seed_i, cid], axis=1)
+    out_ids = jnp.take_along_axis(merged_ids, new_pos, axis=1)
+    ids_ref[...] = jnp.where(jnp.isfinite(new_vals), out_ids, -1)
+    val_ref[...] = new_vals
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "k", "metric", "tq", "interpret"))
+def quant_rerank(queries, codes, scales, cand_ids, cand_counts, *, tau: int,
+                 k: int, metric: str = "angular", tq: int = 8,
+                 interpret: bool = False):
+    """queries [Q, D] f32, codes [L, D] int8|bf16, scales [L, D/block] f32,
+    cand_ids [Q, C] i32 (pad -1), cand_counts [Q, C] f32
+    -> (ids [Q, k] i32 with -1 where no survivor, scores [Q, k] f32 coarse
+    similarities, -inf on the -1 slots)."""
+    Q, C = cand_ids.shape
+    D = codes.shape[1]
+    block = D // scales.shape[1]
+    k = min(k, C)
+
+    tq = min(tq, Q)
+    Qp = ((Q + tq - 1) // tq) * tq
+    pad = Qp - Q
+    if pad:
+        queries = jnp.pad(queries, ((0, pad), (0, 0)))
+        cand_ids = jnp.pad(cand_ids, ((0, pad), (0, 0)), constant_values=-1)
+        cand_counts = jnp.pad(cand_counts, ((0, pad), (0, 0)))
+
+    ids, vals = pl.pallas_call(
+        functools.partial(_kernel, C=C, block=block, k=k, tau=tau,
+                          metric=metric),
+        grid=(Qp // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, D), lambda i: (i, 0)),
+            pl.BlockSpec((tq, C), lambda i: (i, 0)),
+            pl.BlockSpec((tq, C), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=ANY),
+            pl.BlockSpec(memory_space=ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(queries, cand_ids, cand_counts, codes, scales)
+    return ids[:Q], vals[:Q]

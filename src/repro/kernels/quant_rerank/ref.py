@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused quantized coarse-rerank kernel.
+
+Gathers + dequantizes ALL candidate rows at once (a [Q, C, D] fp32
+intermediate — fine for an oracle, forbidden on the serving path, which
+uses the chunked ops.py fallback or the Pallas kernel). Contract shared by
+all three: per-pair score = q · (codes * repeat(scales, block)) for
+angular, -Σ(q - deq)² for l2; invalid slots (id < 0 or count < tau) score
+-inf and emit id -1; top-k ties break toward the smaller candidate
+position (jax.lax.top_k stability).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.store.quantized import dequant_gathered
+
+
+def quant_rerank_ref(queries, codes, scales, cand_ids, cand_counts, *,
+                     tau: int, k: int, metric: str = "angular"):
+    """-> (ids [Q, k] i32 with -1 pads, scores [Q, k] f32, -inf on pads).
+    ``scales=None`` means scale-less (bf16) codes."""
+    k = min(k, cand_ids.shape[1])
+    block = codes.shape[1] // scales.shape[1] if scales is not None else 0
+    deq = dequant_gathered(codes, scales, jnp.maximum(cand_ids, 0),
+                           block)                             # [Q, C, D] f32
+    if metric == "l2":
+        sim = -jnp.sum((queries[:, None, :] - deq) ** 2, axis=-1)
+    else:
+        sim = jnp.sum(queries[:, None, :] * deq, axis=-1)
+    valid = (cand_ids >= 0) & (cand_counts >= tau)
+    sim = jnp.where(valid, sim, -jnp.inf)
+    vals, pos = jax.lax.top_k(sim, k)
+    ids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    return jnp.where(jnp.isfinite(vals), ids, -1), vals

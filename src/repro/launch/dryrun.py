@@ -153,6 +153,41 @@ def analyze(lowered, want_hlo: bool = True):
     return rec
 
 
+def check_store_accounting(rec: dict, n_shards: int) -> dict:
+    """Per-shard byte accounting for irli-deep1b/serve_query: the compiled
+    cell's arguments must carry int8 CODE bytes, not fp32 vectors.
+
+    Returns the accounting dict (also stashed on the result record);
+    raises if the compiled argument footprint could only be explained by a
+    fp32 base payload. ``argument_size_in_bytes`` may be reported globally
+    or per-device depending on the backend, so the assertion brackets both:
+    it must not exceed the GLOBAL int8-store argument total, and the int8
+    payload itself must beat fp32 by >= 3x (pure config math)."""
+    from repro.configs.irli_deep1b import serve_store_bytes
+    acct = serve_store_bytes(n_shards)
+    ratio = acct["fp32_per_shard"] / acct["int8_per_shard"]
+    if ratio < 3.0:
+        raise AssertionError(
+            f"store accounting: int8 payload only {ratio:.2f}x smaller "
+            "than fp32 — the serve cell is not declaring code bytes")
+    args = rec.get("argument_size_in_bytes")
+    if args is not None:
+        # global args = store + members + scorer + queries; a fp32 base
+        # would blow past this bound by ~n_shards * (fp32 - int8) bytes
+        # (~37 GB at P=512). Slack covers the replicated scorer (w2 alone
+        # is R*H*B*4 ≈ 2.45 GiB) + queries + alignment.
+        slack = 4 << 30
+        global_budget = n_shards * (acct["int8_per_shard"]
+                                    + acct["members_per_shard"]) + slack
+        if args > global_budget:
+            raise AssertionError(
+                f"store accounting: compiled argument bytes {args} exceed "
+                f"the int8-store budget {global_budget} — fp32 vectors "
+                "are back in the serve arguments")
+    rec["store_accounting"] = dict(acct, fp32_over_int8=round(ratio, 2))
+    return acct
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
@@ -196,6 +231,8 @@ def main():
                     print(f"[skip]  {key}: {r['reason']}", flush=True)
                 else:
                     rec = analyze(r["lowered"])
+                    if name == "irli-deep1b" and shape == "serve_query":
+                        check_store_accounting(rec, len(jax.devices()))
                     rec["status"] = "ok"
                     rec["lower_s"] = round(time.time() - t0 - rec["compile_s"], 1)
                     results[key] = rec

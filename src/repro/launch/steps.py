@@ -248,20 +248,34 @@ def build_irli_train_step(scorer_cfg, n_buckets: int, opt_kind="adamw_nomaster",
 
 
 def build_irli_serve(mesh, m: int, tau: int, k: int, loss_kind="softmax_bce",
-                     metric="angular"):
+                     metric="angular", store_dtype: str = "fp32",
+                     store_block: int = 32, refine_k: int = 0):
     """Production sharded-corpus IRLI query (paper §5.3 / Fig. 5-6): every
     chip = one paper "node" owning L/P vectors + its R-rep inverted index;
-    shard_map with one tiny all_gather merge."""
+    shard_map with one tiny all_gather merge.
+
+    ``store_dtype="int8"`` serves the quantized tiered store
+    (docs/store.md): the cell's params then carry ``base_codes`` [P, L_loc,
+    D] int8 + ``base_scales`` [P, L_loc, D/block] fp32 instead of a fp32
+    ``base`` — the change that makes the deep1b corpus fit per-chip HBM."""
     del loss_kind                   # serving is loss-agnostic
     from repro.core.distributed import make_production_search
     from repro.core.search_api import SearchParams
+    from repro.store.quantized import QuantizedStore
 
     search = make_production_search(
-        mesh, SearchParams(m=m, tau=tau, k=k, metric=metric))
+        mesh, SearchParams(m=m, tau=tau, k=k, metric=metric,
+                           store_dtype=store_dtype, refine_k=refine_k))
 
     def step(params, batch):
-        res = search(params["scorer"], params["members"],
-                     params["base"], batch["queries"])
+        if store_dtype == "fp32":
+            base = params["base"]
+        else:
+            base = QuantizedStore(
+                store_dtype, store_block, params["base_codes"],
+                params["base_scales"] if store_dtype == "int8" else None)
+        res = search(params["scorer"], params["members"], base,
+                     batch["queries"])
         return {"ids": res.ids, "scores": res.scores}
 
     return step

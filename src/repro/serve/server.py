@@ -8,7 +8,11 @@ deployments amortize the R-net forward over a micro-batch. This server:
     resolve to a per-request ``SearchResult``
   - collects requests up to ``max_batch`` or ``max_wait_ms``, grouping by
     params: same-params requests batch together, a differing-params request
-    closes the current group and starts the next (arrival order preserved)
+    closes the current group and starts the next (arrival order preserved).
+    ``SearchParams.store_dtype`` rides along like every other knob: a server
+    over a quantized-store index (or with ``base`` given as a
+    QuantizedStore) serves the tiered coarse+refine rerank, and fp32 vs
+    int8 requests simply land in different param groups (docs/store.md)
   - pads each group to a bucket size (ladder derived from ``max_batch``, so
     a full batch never pads past itself) — one jit specialization per
     (params, bucket), compiled once and reused via this server's

@@ -1,0 +1,14 @@
+"""Tiered quantized vector store (docs/store.md).
+
+``QuantizedStore`` replaces the raw fp32 base array on every serving
+surface: int8 (or bf16) block-scaled codes for the coarse candidate
+scoring, plus an optional exact fp32 tier for the k'-survivor refine.
+"""
+from repro.store.quantized import (QuantizedStore, STORE_DTYPES,
+                                   check_scales, decode, dequant_gathered,
+                                   dequant_rows, encode, refine_rows)
+from repro.store.rerank import rerank_two_stage, resolve_refine_k
+
+__all__ = ["QuantizedStore", "STORE_DTYPES", "check_scales", "encode",
+           "decode", "dequant_gathered", "dequant_rows", "refine_rows",
+           "rerank_two_stage", "resolve_refine_k"]

@@ -1,0 +1,199 @@
+"""QuantizedStore — the tiered vector payload behind every rerank surface.
+
+The paper's 100M-point configuration (§5.3, configs/irli_deep1b.py:
+2^27 × 96-d) cannot keep fp32 base vectors resident: ~51 GB per replica.
+Compact candidate generation (PR 2) removed the [Q, L] tables; the vector
+payload itself is the remaining memory bottleneck. The standard fix in
+learned-index systems (compressed-code rerank + small exact refine — see
+PAPERS.md: Chiu et al., LIRA) is a tiered store:
+
+  coarse tier — block-scaled codes: ``codes [L, D]`` int8 (or bf16) plus
+      per-row-block fp32 ``scales [L, D/block]``. int8+scales is ~3.8x
+      smaller than fp32 at block=32. Candidate scoring gathers CODE rows,
+      so the big [Q, C, D] gather moves 1 byte/element.
+  exact tier — optional fp32 rows (``exact``). When present (the streaming
+      index keeps its fp32 vector buffer as this tier), the refine stage
+      re-scores the k' coarse survivors at full precision; when absent
+      (the deep1b deployment), refine re-scores on-the-fly dequantized
+      rows — still only k' of them, never the whole corpus.
+
+``dtype="fp32"`` is the identity store: ``codes`` IS the fp32 base and
+every serving surface produces bit-identical results to passing the raw
+array (tests/test_store.py pins this).
+
+A QuantizedStore is a registered pytree (codes/scales/exact are leaves;
+dtype/block are static), so it passes through jit, shard_map and the
+PipelineCache exactly like the raw base array it replaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: store dtypes every surface validates against (search_api.SearchParams
+#: mirrors this tuple so the knob and the payload can't drift apart)
+STORE_DTYPES = ("fp32", "int8", "bf16")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedStore:
+    """Block-scaled quantized vector rows + optional exact fp32 tier.
+
+    codes  [L, D]        int8 ("int8") | bfloat16 ("bf16") | float32 ("fp32")
+    scales [L, D/block]  fp32 per-row-block scales ("int8" only, else None)
+    exact  [L, D]        optional fp32 refine tier (None = dequant refine)
+    """
+    dtype: str
+    block: int
+    codes: jnp.ndarray
+    scales: jnp.ndarray | None = None
+    exact: jnp.ndarray | None = None
+
+    # NO __post_init__ validation: jax reconstructs registered pytrees with
+    # stand-in children in several internal paths (shard_map spec trees
+    # flatten through tuple-subclass PartitionSpecs), so constraints are
+    # enforced at the use sites instead — see check_scales / check_store.
+
+    # ------------------------------------------------------------- pytree --
+    def tree_flatten(self):
+        return (self.codes, self.scales, self.exact), (self.dtype, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], aux[1], *children)
+
+    # -------------------------------------------------------------- shape --
+    @property
+    def shape(self):
+        """Row-major shape of the stored corpus — ``codes.shape``, so every
+        ``base.shape[0]`` call site serves a store unchanged."""
+        return self.codes.shape
+
+    @property
+    def n_rows(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.codes.shape[-1]
+
+    # ------------------------------------------------------------- memory --
+    def nbytes(self) -> int:
+        """Resident bytes of the coarse tier (codes + scales). The exact
+        tier is deployment-optional and accounted separately."""
+        n = self.codes.size * self.codes.dtype.itemsize
+        if self.scales is not None:
+            n += self.scales.size * self.scales.dtype.itemsize
+        return int(n)
+
+    def fp32_nbytes(self) -> int:
+        """What the same rows cost as raw fp32 — the memory the store saves."""
+        return int(self.codes.size * 4)
+
+    # -------------------------------------------------------------- update --
+    def append(self, ids, x) -> "QuantizedStore":
+        """Functionally write rows ``x`` [n, D] at row indices ``ids`` [n]
+        (encode with THIS store's dtype/block). Returns a new store; the
+        caller swaps it in (the streaming snapshot-swap discipline)."""
+        x = jnp.asarray(x, jnp.float32)
+        enc = encode(x, self.dtype, self.block)
+        codes = self.codes.at[ids].set(enc.codes)
+        scales = (self.scales.at[ids].set(enc.scales)
+                  if self.scales is not None else None)
+        exact = self.exact.at[ids].set(x) if self.exact is not None else None
+        return QuantizedStore(self.dtype, self.block, codes, scales, exact)
+
+
+def _check_dtype(dtype: str) -> None:
+    if dtype not in STORE_DTYPES:
+        raise ValueError(f"store dtype must be one of {STORE_DTYPES}, "
+                         f"got {dtype!r}")
+
+
+def check_scales(store: QuantizedStore) -> None:
+    """int8 codes are meaningless without their scales — every serving
+    entry calls this so a hand-built scale-less store fails loudly instead
+    of silently coarse-ranking unscaled codes (or dying deep in a trace
+    with 'NoneType is not subscriptable')."""
+    _check_dtype(store.dtype)
+    if store.dtype == "int8" and store.scales is None:
+        raise ValueError("an int8 QuantizedStore requires scales")
+    if store.dtype != "int8" and store.scales is not None:
+        raise ValueError(f"scales are only valid for int8 stores, got "
+                         f"dtype={store.dtype!r}")
+
+
+def encode(x, dtype: str = "int8", block: int = 32, *,
+           keep_exact: bool = False) -> QuantizedStore:
+    """Encode fp32 rows [L, D] into a QuantizedStore.
+
+    int8 block-scaling: per (row, block) scale = max|x| / 127, codes =
+    round(x / scale) — so the element-wise round-trip error is bounded by
+    scale/2 (property-tested in tests/test_store.py). All-zero blocks get
+    scale 1/127 (codes 0, exact round trip). ``keep_exact`` retains ``x``
+    as the fp32 refine tier.
+    """
+    _check_dtype(dtype)
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"encode expects [L, D] rows, got shape {x.shape}")
+    exact = x if keep_exact else None
+    if dtype == "fp32":
+        return QuantizedStore("fp32", block, x, None, exact)
+    if dtype == "bf16":
+        return QuantizedStore("bf16", block, x.astype(jnp.bfloat16), None,
+                              exact)
+    L, D = x.shape
+    block = min(block, D)
+    if D % block != 0:
+        raise ValueError(f"scale block {block} must divide D={D}")
+    nb = D // block
+    xb = x.reshape(L, nb, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)                      # [L, nb]
+    scales = jnp.where(amax > 0, amax, 1.0) / 127.0
+    codes = jnp.round(xb / scales[..., None]).astype(jnp.int8)
+    return QuantizedStore("int8", block, codes.reshape(L, D), scales, exact)
+
+
+def decode(store: QuantizedStore) -> jnp.ndarray:
+    """Full fp32 decode [L, D] — for tests and offline tooling ONLY. The
+    serving path never calls this on a whole store (that is exactly the
+    fp32 [L, D] materialization the subsystem exists to avoid)."""
+    return dequant_rows(store, jnp.arange(store.n_rows))
+
+
+def dequant_gathered(codes, scales, ids, block: int) -> jnp.ndarray:
+    """THE block-dequant expression: gather rows ``ids`` from codes [L, D]
+    + scales [L, D/block] and widen to fp32 [..., D]. Every jnp site
+    (dequant_rows, the chunked coarse fallback, the kernel oracle) calls
+    this one helper — the Pallas kernel mirrors it row-wise in VMEM — so a
+    change to the block/scale layout cannot silently diverge between the
+    coarse stage and decode. ``scales=None`` (bf16 codes) is a plain
+    widening gather — no fabricated unit-scale table, no multiply."""
+    if scales is None:
+        return codes[ids].astype(jnp.float32)
+    return codes[ids].astype(jnp.float32) \
+        * jnp.repeat(scales[ids], block, axis=-1)
+
+
+def dequant_rows(store: QuantizedStore, ids) -> jnp.ndarray:
+    """Gather + dequantize rows by index: ids [...] -> fp32 [..., D].
+
+    The refine stage calls this for the k' survivors when no exact tier is
+    kept."""
+    if store.dtype == "fp32":
+        return store.codes[ids]
+    if store.dtype == "bf16":
+        return store.codes[ids].astype(jnp.float32)
+    return dequant_gathered(store.codes, store.scales, ids, store.block)
+
+
+def refine_rows(store: QuantizedStore, ids) -> jnp.ndarray:
+    """The refine tier's view of rows ``ids``: exact fp32 when the store
+    keeps an exact tier, on-the-fly dequantized otherwise."""
+    if store.exact is not None:
+        return store.exact[ids]
+    return dequant_rows(store, ids)

@@ -20,6 +20,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import partition as PT
+from repro.store import quantized as ST
 from repro.stream.delta import delta_init
 
 
@@ -42,9 +43,17 @@ def compact_snapshot(snap, B: int, pad_multiple: int = 8):
     idx = PT.build_inverted_index(assign, B + 1, max_load)
     DL = snap.delta.members.shape[2]
     R = snap.assign.shape[0]
+    extra = {}
+    if snap.store is not None:
+        # re-encode the quantized coarse tier from the fp32 buffer inside
+        # the SAME atomic swap: codes can never drift from vecs across a
+        # compaction (append-path and full-encode scales are re-derived
+        # from identical rows, so this is also exact)
+        extra["store"] = ST.encode(snap.vecs, snap.store.dtype,
+                                   snap.store.block)
     return dataclasses.replace(
         snap,
         members=idx.members[:, :B],
         load=idx.load[:, :B].astype(jnp.int32),
         delta=delta_init(R, B, DL),
-        epoch=snap.epoch + 1)
+        epoch=snap.epoch + 1, **extra)

@@ -35,6 +35,7 @@ from repro.core import search_api as SA
 from repro.core.index import IRLIIndex
 from repro.core.network import scorer_probs
 from repro.core.repartition import kchoice_exact
+from repro.store import quantized as ST
 from repro.stream import compaction
 from repro.stream.delta import (DeltaState, default_delta_len, delta_append,
                                 delta_init)
@@ -56,6 +57,12 @@ class StreamSnapshot:
     vecs: jnp.ndarray        # [capacity, d] float32 vector buffer
     n_total: int             # high-water mark of issued ids
     epoch: int               # bumped on every mutation / compaction
+    store: ST.QuantizedStore | None = None   # quantized coarse tier over
+    #                          the SAME [capacity, d] rows (docs/store.md):
+    #                          inserts encode into it, compaction re-encodes
+    #                          it from vecs, searches with
+    #                          store_dtype != "fp32" rerank on its codes
+    #                          with vecs as the exact fp32 refine tier
 
 
 @partial(jax.jit, static_argnames=("B", "K", "loss_kind"))
@@ -91,7 +98,8 @@ class MutableIRLIIndex:
     """
 
     def __init__(self, index: IRLIIndex, base_vecs, capacity: int | None = None,
-                 delta_len: int | None = None):
+                 delta_len: int | None = None, store_dtype: str = "fp32",
+                 store_block: int = 32):
         assert index.index is not None, "fit() or build_index() first"
         self.cfg = index.cfg
         base_vecs = np.asarray(base_vecs, np.float32)
@@ -101,19 +109,23 @@ class MutableIRLIIndex:
         self.capacity = int(capacity if capacity is not None else 2 * L)
         assert self.capacity >= L
         self.n_base = L
+        self.store_dtype = store_dtype
+        self.store_block = store_block
         DL = (delta_len if delta_len is not None
               else default_delta_len(self.capacity, L, B))
         vecs = jnp.zeros((self.capacity, d), jnp.float32)
         vecs = vecs.at[:L].set(base_vecs)
         assign = jnp.full((R, self.capacity), B, jnp.int32)   # B = unused
         assign = assign.at[:, :L].set(index.assign)
+        store = (None if store_dtype == "fp32"
+                 else ST.encode(vecs, store_dtype, store_block))
         self._snapshot = StreamSnapshot(
             params=index.params,
             members=index.index.members,
             delta=delta_init(R, B, DL),
             tombstone=jnp.zeros((self.capacity,), bool),
             load=index.index.load.astype(jnp.int32),
-            assign=assign, vecs=vecs, n_total=L, epoch=0)
+            assign=assign, vecs=vecs, n_total=L, epoch=0, store=store)
         # A frozen index may TRUNCATE over-full buckets (max_load_slack cap),
         # leaving members ⊊ assign. The mutable index requires members ≡
         # assign — delete's load accounting and compaction exactness both
@@ -183,7 +195,18 @@ class MutableIRLIIndex:
                       cache: SA.PipelineCache | None) -> SA.SearchResult:
         s = self._snapshot          # ONE read: a consistent view throughout
         cache = cache if cache is not None else SA.DEFAULT_CACHE
-        return cache.search(params, s.params, s.members, s.vecs,
+        if params.store_dtype == "fp32":
+            base = s.vecs
+        elif s.store is None:
+            raise ValueError(
+                f"params.store_dtype={params.store_dtype!r} but this index "
+                "was built without a quantized store — construct "
+                "MutableIRLIIndex(..., store_dtype=...)")
+        else:
+            # fp32 buffer doubles as the exact refine tier: coarse scoring
+            # gathers code rows, the k' survivors re-score at full precision
+            base = dataclasses.replace(s.store, exact=s.vecs)
+        return cache.search(params, s.params, s.members, base,
                             jnp.asarray(queries), s.delta.members,
                             s.tombstone, epoch=s.epoch)
 
@@ -245,6 +268,10 @@ class MutableIRLIIndex:
             load=s.load + dload.astype(jnp.int32),
             assign=s.assign.at[:, new_ids].set(buckets),
             vecs=s.vecs.at[new_ids].set(vj[:n_new]),
+            # quantize the inserted rows into the coarse tier in the SAME
+            # snapshot swap — an item is never queryable before its codes
+            store=(s.store.append(new_ids, vj[:n_new])
+                   if s.store is not None else None),
             n_total=s.n_total + n_new, epoch=s.epoch + 1)
         return np.asarray(new_ids)
 
@@ -285,23 +312,33 @@ class MutableIRLIIndex:
 
     # ------------------------------------------------------- checkpointing --
     def state_dict(self, snapshot: StreamSnapshot | None = None) -> dict:
-        """Arrays of the full mutable state, nested for CheckpointManager."""
+        """Arrays of the full mutable state, nested for CheckpointManager.
+        Quantized-store codes + scales round-trip alongside (bf16 codes are
+        widened to fp32 for the npz — exact, bf16 re-cast on restore)."""
         s = snapshot if snapshot is not None else self._snapshot
-        return {
-            "scorer": s.params,
-            "stream": {
-                "members": s.members, "delta_members": s.delta.members,
-                "delta_fill": s.delta.fill, "tombstone": s.tombstone,
-                "load": s.load, "assign": s.assign, "vecs": s.vecs,
-            },
+        stream = {
+            "members": s.members, "delta_members": s.delta.members,
+            "delta_fill": s.delta.fill, "tombstone": s.tombstone,
+            "load": s.load, "assign": s.assign, "vecs": s.vecs,
         }
+        if s.store is not None:
+            codes = s.store.codes
+            stream["store_codes"] = (codes if codes.dtype == jnp.int8
+                                     else codes.astype(jnp.float32))
+            if s.store.scales is not None:
+                stream["store_scales"] = s.store.scales
+        return {"scorer": s.params, "stream": stream}
 
     def meta(self, snapshot: StreamSnapshot | None = None) -> dict:
         s = snapshot if snapshot is not None else self._snapshot
         return {"n_total": s.n_total, "epoch": s.epoch,
                 "capacity": self.capacity, "n_base": self.n_base,
                 "n_buckets": self.cfg.n_buckets, "n_reps": self.cfg.n_reps,
-                "d": self.cfg.d, "loss": self.cfg.loss}
+                "d": self.cfg.d, "loss": self.cfg.loss,
+                "store_dtype": (s.store.dtype if s.store is not None
+                                else "fp32"),
+                "store_block": (s.store.block if s.store is not None
+                                else self.store_block)}
 
     def save(self, manager, step: int) -> None:
         """Checkpoint through checkpoint/checkpointer.CheckpointManager.
@@ -318,12 +355,27 @@ class MutableIRLIIndex:
         st = tree["stream"]
         expect = {"capacity": self.capacity, "n_buckets": self.cfg.n_buckets,
                   "n_reps": self.cfg.n_reps, "d": self.cfg.d,
-                  "loss": self.cfg.loss}
+                  "loss": self.cfg.loss, "store_dtype": self.store_dtype}
         for key, want in expect.items():
             if key in extra and extra[key] != want:
                 raise ValueError(
                     f"checkpoint config mismatch: {key}={extra[key]!r}, "
                     f"this index has {want!r}")
+        store = None
+        if "store_codes" in st:
+            codes = jnp.asarray(st["store_codes"])
+            dtype = extra.get("store_dtype", self.store_dtype)
+            if dtype == "bf16":           # widened to fp32 in the npz
+                codes = codes.astype(jnp.bfloat16)
+            store = ST.QuantizedStore(
+                dtype, int(extra.get("store_block", self.store_block)),
+                codes,
+                (jnp.asarray(st["store_scales"], jnp.float32)
+                 if "store_scales" in st else None))
+        elif self.store_dtype != "fp32":
+            raise ValueError(
+                "checkpoint has no quantized store but this index was "
+                f"built with store_dtype={self.store_dtype!r}")
         with self._mu:
             self._snapshot = StreamSnapshot(
                 params=jax.tree.map(jnp.asarray, tree["scorer"]),
@@ -335,4 +387,5 @@ class MutableIRLIIndex:
                 load=jnp.asarray(st["load"], jnp.int32),
                 assign=jnp.asarray(st["assign"], jnp.int32),
                 vecs=jnp.asarray(st["vecs"], jnp.float32),
-                n_total=int(extra["n_total"]), epoch=int(extra["epoch"]))
+                n_total=int(extra["n_total"]), epoch=int(extra["epoch"]),
+                store=store)

@@ -124,6 +124,83 @@ def test_freq_topc_ref_matches_core_sorted_path():
     np.testing.assert_array_equal(np.asarray(cnt_r), np.asarray(cnt_s))
 
 
+# ----------------------------------------------------------- quant_rerank ---
+from repro.kernels.quant_rerank.quant_rerank import quant_rerank
+from repro.kernels.quant_rerank.ops import _coarse_chunked
+from repro.kernels.quant_rerank.ref import quant_rerank_ref
+
+
+@pytest.mark.parametrize("metric", ["angular", "l2"])
+@pytest.mark.parametrize("Q,L,D,C,k,blk,tq", [
+    (8, 200, 32, 24, 8, 16, 4),
+    (7, 500, 48, 40, 12, 16, 4),     # row padding (7 % 4 != 0)
+    (4, 100, 16, 12, 20, 8, 2),      # k > C: clamped to C
+])
+def test_quant_rerank_matches_ref(metric, Q, L, D, C, k, blk, tq):
+    """Fused gather+dequant+score+top-k' kernel vs the jnp oracle: ids are
+    EXACTLY equal (shared tie-break: smaller candidate position first, -1
+    where no candidate survived), coarse scores to fp tolerance."""
+    from repro.store import encode
+    rng = np.random.default_rng(Q + L)
+    st = encode(rng.normal(size=(L, D)).astype(np.float32), "int8", blk)
+    q = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    cid = jnp.asarray(rng.integers(-1, L, (Q, C)), jnp.int32)
+    cnt = jnp.asarray(rng.integers(0, 4, (Q, C)), jnp.float32)
+    cid = cid.at[-1].set(-1)                     # zero-candidate row
+    i_k, v_k = quant_rerank(q, st.codes, st.scales, cid, cnt, tau=1, k=k,
+                            metric=metric, tq=tq, interpret=True)
+    i_r, v_r = quant_rerank_ref(q, st.codes, st.scales, cid, cnt, tau=1,
+                                k=k, metric=metric)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(i_k)[-1] == -1).all()     # empty row stays empty
+
+
+@pytest.mark.parametrize("metric", ["angular", "l2"])
+def test_quant_rerank_bf16_matches_ref(metric):
+    """bf16 codes through the Pallas kernel (bf16 ANY-space loads, unit
+    scales with one block spanning D) vs the scale-less oracle path."""
+    rng = np.random.default_rng(11)
+    L, D, Q, C = 150, 32, 6, 20
+    codes = jnp.asarray(rng.normal(size=(L, D)), jnp.float32) \
+        .astype(jnp.bfloat16)
+    ones = jnp.ones((L, 1), jnp.float32)     # what ops fabricates on TPU
+    q = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    cid = jnp.asarray(rng.integers(-1, L, (Q, C)), jnp.int32)
+    cnt = jnp.asarray(rng.integers(0, 3, (Q, C)), jnp.float32)
+    i_k, v_k = quant_rerank(q, codes, ones, cid, cnt, tau=1, k=8,
+                            metric=metric, tq=2, interpret=True)
+    i_r, v_r = quant_rerank_ref(q, codes, None, cid, cnt, tau=1, k=8,
+                                metric=metric)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r),
+                               rtol=1e-5, atol=1e-5)
+    i_c, v_c = _coarse_chunked(q, codes, None, cid, cnt, tau=1, k=8,
+                               metric=metric, chunk=8)
+    np.testing.assert_array_equal(np.asarray(i_c), np.asarray(i_r))
+
+
+@pytest.mark.parametrize("metric", ["angular", "l2"])
+def test_quant_coarse_chunked_matches_ref(metric):
+    """The memory-bounded jnp fallback (candidate chunking) returns the
+    oracle's exact ids — chunking changes memory, never results."""
+    from repro.store import encode
+    rng = np.random.default_rng(5)
+    st = encode(rng.normal(size=(300, 32)).astype(np.float32), "int8", 16)
+    q = jnp.asarray(rng.normal(size=(6, 32)), jnp.float32)
+    cid = jnp.asarray(rng.integers(-1, 300, (6, 50)), jnp.int32)
+    cnt = jnp.asarray(rng.integers(0, 3, (6, 50)), jnp.float32)
+    i_r, v_r = quant_rerank_ref(q, st.codes, st.scales, cid, cnt, tau=1,
+                                k=16, metric=metric)
+    for chunk in (7, 16, 50, 128):               # incl. non-divisors, > C
+        i_c, v_c = _coarse_chunked(q, st.codes, st.scales, cid, cnt, tau=1,
+                                   k=16, metric=metric, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(i_c), np.asarray(i_r))
+        np.testing.assert_allclose(np.asarray(v_c), np.asarray(v_r),
+                                   rtol=1e-5, atol=1e-5)
+
+
 # ------------------------------------------------------- flash attention ----
 from repro.kernels.flash_attn.flash_attn import flash_attention
 from repro.kernels.flash_attn.ref import flash_attention_ref
