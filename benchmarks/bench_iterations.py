@@ -22,20 +22,23 @@ def run(csv=True):
                          d_hidden=128, K=16, rounds=5, epochs_per_round=3,
                          batch_size=512, lr=2e-3, seed=1)
         idx = IRLIIndex(cfg)
-        # manual round loop to measure per-round recall (Fig. 4)
+        # manual round loop to measure per-round recall (Fig. 4): drive the
+        # FitEngine one compiled round at a time (scan-compiled epochs +
+        # fused streaming-affinity re-partition), querying between rounds
+        from repro.fit import FitData, FitEngine, FitState
         x = jnp.asarray(data.train_queries)
         ids = jnp.asarray(data.train_gt)
-        import repro.core.repartition as RP
-        import repro.core.partition as PT
-        import jax
-        mask_ids = jnp.ones(ids.shape, jnp.float32)
+        fdata = FitData.build(x, ids, label_vecs=data.base,
+                              n_labels=cfg.n_labels,
+                              chunk=cfg.affinity_chunk)
+        engine = FitEngine(cfg, idx.scorer_cfg)
+        state = FitState.create(idx.params, idx.opt_state, idx.assign,
+                                idx.key)
+        round_fn = engine.make_fit_round(fdata)
         for rnd in range(cfg.rounds):
-            for _ in range(cfg.epochs_per_round):
-                idx.key, ke = jax.random.split(idx.key)
-                idx._epoch(x, ids, mask_ids, ke)
-            aff = RP.affinity_ann(idx.params, jnp.asarray(data.base), cfg.loss)
-            idx.key, kr = jax.random.split(idx.key)
-            idx.assign = RP.repartition(aff, cfg.K, cfg.n_buckets, "exact", kr)
+            bidx, bw = engine.round_batches(x.shape[0], cfg.seed, rnd)
+            state, _ = round_fn(state, bidx, bw)
+            idx.params, idx.assign = state.params, state.assign
             idx.build_index()
             t0 = time.time()
             mask, freq, ncand = idx.query(data.queries, m=4, tau=1)

@@ -16,6 +16,8 @@ BENCHES = [
      "pipeline recall parity + memory crossover"),
     ("store", "benchmarks.bench_store",
      "quantized tiered store: recall parity + bytes + rerank latency"),
+    ("fit", "benchmarks.bench_fit",
+     "scan-compiled fit rounds vs host loop + affinity memory"),
     ("iterations", "benchmarks.bench_iterations", "paper Fig 4 / Table 4"),
     ("xml", "benchmarks.bench_xml", "paper Tables 1-2"),
     ("distributed", "benchmarks.bench_distributed", "paper Figs 5-6"),

@@ -11,7 +11,11 @@ Mapping (DESIGN §3/§5): the paper's P=8 corpus shards generalize to the full
                   tiered vector store (serve) — the store's first consumer
 
 These two extra cells put the paper's actual workload on the production mesh
-alongside the 40 assigned-architecture cells.
+alongside the 40 assigned-architecture cells. ``fit_config()`` additionally
+carries the FitEngine hyperparameters (docs/fit.md) behind
+``launch/train.py --arch irli`` — full-size for the production mesh,
+``reduced=True`` for the CPU container / CI fit-smoke — and
+``fit_affinity_bytes()`` pins the streaming-vs-dense affinity accounting.
 """
 from __future__ import annotations
 
@@ -40,6 +44,45 @@ N_SCALE_BLOCKS = D // STORE_BLOCK
 
 SCORER_CFG = ScorerConfig(d_in=D, d_hidden=HIDDEN, n_buckets=B_BUCKETS,
                           n_reps=R, loss="softmax_bce")
+
+# fit-engine hyperparameters (docs/fit.md): the paper's Alg. 1 alternation
+FIT_K = 10                    # power-of-K re-partition choices
+FIT_ROUNDS = 5
+FIT_EPOCHS_PER_ROUND = 5
+FIT_BATCH = 1 << 15           # matches the train_scorers cell
+FIT_AFFINITY_CHUNK = 1 << 16  # label-chunk width of the streaming top-K
+
+
+def fit_config(*, reduced: bool = False):
+    """The IRLIConfig behind ``launch/train.py --arch irli``.
+
+    ``reduced=True`` shrinks every shape for the CPU container / CI
+    fit-smoke while keeping the identical code paths (scan-compiled rounds,
+    streaming affinity, (data × rep) shard_map); the full-size config is
+    what the production mesh trains."""
+    from repro.core.index import IRLIConfig
+    if reduced:
+        return IRLIConfig(d=16, n_labels=500, n_buckets=32, n_reps=4,
+                          d_hidden=32, K=4, rounds=FIT_ROUNDS,
+                          epochs_per_round=2, batch_size=128, lr=2e-3,
+                          affinity_chunk=128, seed=0)
+    return IRLIConfig(d=D, n_labels=N_CORPUS, n_buckets=B_BUCKETS, n_reps=R,
+                      d_hidden=HIDDEN, K=FIT_K, rounds=FIT_ROUNDS,
+                      epochs_per_round=FIT_EPOCHS_PER_ROUND,
+                      batch_size=FIT_BATCH, lr=1e-3,
+                      affinity_chunk=FIT_AFFINITY_CHUNK, seed=0)
+
+
+def fit_affinity_bytes(chunk: int = FIT_AFFINITY_CHUNK) -> dict:
+    """Byte accounting of the re-partition affinity at paper scale: the
+    dense [R, L, B] table the seed code materialized vs the streaming
+    reducer's live set (one [R, chunk, B] block + the running [R, L, K]
+    carry). Asserted >= 100x apart in tests/test_fit_engine.py so the
+    config can't silently regress to the dense path."""
+    dense = R * N_CORPUS * B_BUCKETS * 4
+    streaming = R * chunk * B_BUCKETS * 4 + R * N_CORPUS * FIT_K * (4 + 4)
+    return {"dense_RLB": dense, "streaming": streaming,
+            "ratio": dense / streaming}
 
 
 def _abstract_params():

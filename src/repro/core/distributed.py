@@ -46,6 +46,11 @@ else:
     from jax.experimental.shard_map import shard_map as _shard_map
     _SM_KW = {"check_rep": False}
 
+# public re-export: every other mesh program in the repo (fit engine, launch
+# cells) routes through the same version-compat shim instead of redoing the
+# 0.4.x/experimental probe
+shard_map_compat, SHARD_MAP_COMPAT_KW = _shard_map, _SM_KW
+
 
 def _resolve(params: SearchParams, L_loc: int, q_batch: int,
              *, force_compact: bool = False) -> SearchParams:

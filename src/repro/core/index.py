@@ -20,10 +20,10 @@ import numpy as np
 
 from repro.core import partition as PT
 from repro.core import query as Q
-from repro.core import repartition as RP
 from repro.core import search_api as SA
-from repro.core.network import ScorerConfig, scorer_init, scorer_loss
-from repro.optim.optimizers import make_optimizer
+from repro.core.network import ScorerConfig, scorer_init
+from repro.fit.engine import FitData, FitEngine, make_fit_optimizer
+from repro.fit.state import FitState
 
 
 @dataclasses.dataclass
@@ -44,6 +44,8 @@ class IRLIConfig:
     loss: str = "softmax_bce"
     repartition_mode: str = "exact"   # exact | parallel
     max_load_slack: float = 2.0       # member-matrix pad factor over L/B
+    affinity_chunk: int = 4096        # label-chunk width of the streaming
+    #                                   top-K affinity (fit/affinity.py)
     seed: int = 0
 
 
@@ -52,7 +54,9 @@ class FitStats:
     round_idx: list
     n_reassigned: list
     load_std: list
-    train_loss: list
+    train_loss: list      # per round: mean of that round's per-epoch means
+    epoch_loss: list = dataclasses.field(default_factory=list)  # per round:
+    #                     the [epochs_per_round] per-epoch mean losses
 
 
 class IRLIIndex:
@@ -64,88 +68,66 @@ class IRLIIndex:
             d_in=cfg.d, d_hidden=cfg.d_hidden, n_buckets=cfg.n_buckets,
             n_reps=cfg.n_reps, loss=cfg.loss)
         self.params = scorer_init(k1, self.scorer_cfg)
-        self.opt = make_optimizer("adamw", lr=cfg.lr, weight_decay=0.0,
-                                  master_fp32=False)
+        self.opt = make_fit_optimizer(cfg)
         self.opt_state = self.opt.init(self.params)
         self.assign = PT.hash_init(cfg.n_labels, cfg.n_buckets, cfg.n_reps,
                                    cfg.seed)
         self.index: PT.InvertedIndex | None = None
-        self._train_step = jax.jit(self._train_step_impl)
-
-    # ------------------------------------------------------------ training -
-    def _train_step_impl(self, params, opt_state, x, label_ids, label_mask,
-                         assign):
-        targets = PT.bucket_targets(assign, label_ids, label_mask,
-                                    self.cfg.n_buckets)
-
-        def loss_fn(p):
-            return scorer_loss(p, self.scorer_cfg, x, targets)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state, info = self.opt.update(params, grads, opt_state)
-        return params, opt_state, loss
-
-    def _epoch(self, x, label_ids, label_mask, key):
-        n = x.shape[0]
-        bs = min(self.cfg.batch_size, n)
-        perm = jax.random.permutation(key, n)
-        losses = []
-        for s in range(0, n - bs + 1, bs):
-            sel = perm[s:s + bs]
-            self.params, self.opt_state, loss = self._train_step(
-                self.params, self.opt_state, x[sel], label_ids[sel],
-                label_mask[sel], self.assign)
-            losses.append(float(loss))
-        return float(np.mean(losses)) if losses else 0.0
 
     # ---------------------------------------------------------------- fit --
     def fit(self, x_train, label_ids, label_mask=None, label_vecs=None,
-            verbose: bool = False) -> FitStats:
+            verbose: bool = False, mesh=None) -> FitStats:
         """x_train [N,d]; label_ids [N,k] (ANN: k exact neighbors; XML: padded
-        label sets); label_vecs [L,d] enables Def.2 affinity (ANN mode)."""
+        label sets); label_vecs [L,d] enables Def.2 affinity (ANN mode).
+
+        Thin driver over :class:`repro.fit.engine.FitEngine`: each round is
+        ONE compiled call (scan over ``epochs_per_round`` epochs of padded
+        fixed-size batches + streaming top-K affinity + vmapped power-of-K
+        re-partition), with a single host sync per round for the paper's
+        "until re-assignments converge" stop. Pass a (data × rep) ``mesh``
+        (launch/mesh.make_fit_mesh) to shard batches over "data" (psum'd
+        grads) and the R repetitions over "rep" — docs/fit.md.
+        """
         cfg = self.cfg
-        x_train = jnp.asarray(x_train)
-        label_ids = jnp.asarray(label_ids, jnp.int32)
-        if label_mask is None:
-            label_mask = jnp.ones(label_ids.shape, jnp.float32)
+        data = FitData.build(x_train, label_ids, label_mask, label_vecs,
+                             n_labels=cfg.n_labels, chunk=cfg.affinity_chunk)
+        engine = FitEngine(cfg, self.scorer_cfg)
+        # donate COPIES: the engine's round donates its input state, and the
+        # index's live buffers (params/opt_state/assign) must survive an
+        # exception mid-fit on donation-honoring backends
+        state = FitState.create(
+            jax.tree.map(jnp.copy, self.params),
+            jax.tree.map(jnp.copy, self.opt_state),
+            jnp.copy(self.assign), self.key)
+        if mesh is None:
+            round_fn = engine.make_fit_round(data)
+        else:
+            round_fn = engine.make_sharded_fit_round(mesh, data, state)
 
-        # XML incidence pairs for Def. 1 (computed once)
-        if label_vecs is None:
-            pts = np.repeat(np.arange(label_ids.shape[0]), label_ids.shape[1])
-            labs = np.asarray(label_ids).reshape(-1)
-            keep = np.asarray(label_mask).reshape(-1) > 0
-            pair_point = jnp.asarray(pts[keep], jnp.int32)
-            pair_label = jnp.asarray(labs[keep], jnp.int32)
-
-        stats = FitStats([], [], [], [])
+        n = data.x.shape[0]
+        stats = FitStats([], [], [], [], [])
         for rnd in range(cfg.rounds):
-            for ep in range(cfg.epochs_per_round):
-                self.key, ke = jax.random.split(self.key)
-                loss = self._epoch(x_train, label_ids, label_mask, ke)
-            # ---- re-partition -------------------------------------------
-            if label_vecs is not None:
-                aff = RP.affinity_ann(self.params, jnp.asarray(label_vecs),
-                                      cfg.loss)
-            else:
-                aff = RP.affinity_xml(self.params, x_train, pair_point,
-                                      pair_label, cfg.n_labels, cfg.loss)
-            self.key, kr = jax.random.split(self.key)
-            new_assign = RP.repartition(aff, cfg.K, cfg.n_buckets,
-                                        cfg.repartition_mode, kr,
-                                        slack=cfg.parallel_slack)
-            n_re = int(jnp.sum(new_assign != self.assign))
-            self.assign = new_assign
-            lstd = float(PT.load_std(self.assign, cfg.n_buckets))
+            idx, w = engine.round_batches(n, cfg.seed, rnd)
+            state, met = round_fn(state, idx, w)
+            n_re = int(met["n_reassigned"])
+            loss = float(met["loss"])
+            lstd = float(met["load_std"])
             stats.round_idx.append(rnd)
             stats.n_reassigned.append(n_re)
             stats.load_std.append(lstd)
             stats.train_loss.append(loss)
+            stats.epoch_loss.append(
+                [float(l) for l in np.asarray(met["epoch_loss"])])
             if verbose:
                 print(f"[irli] round {rnd}: loss={loss:.4f} "
                       f"reassigned={n_re} load_std={lstd:.2f}")
             if n_re == 0:
                 break
 
+        self.params = state.params
+        self.opt_state = state.opt_state
+        self.assign = state.assign
+        self.key = state.rng
         self.build_index()
         return stats
 

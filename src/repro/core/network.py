@@ -56,12 +56,14 @@ def scorer_probs(params, x, loss_kind: str = "softmax_bce"):
     return jax.nn.sigmoid(logits)
 
 
-def scorer_loss(params, cfg: ScorerConfig, x, targets):
-    """BCE against multi-hot bucket targets. targets: [R, N, B].
+def scorer_loss_parts(params, cfg: ScorerConfig, x, targets, weights=None):
+    """Weighted-sum decomposition of the BCE loss.
 
-    softmax_bce is the paper's formulation (BCE applied to softmax scores);
-    sigmoid_bce is the standard numerically-clean multi-label variant. Both
-    are exposed; EXPERIMENTS.md compares them.
+    Returns ``(sum, wsum)`` where ``sum = Σ_r Σ_n w_n · rowloss(r, n)`` and
+    ``wsum = Σ_n w_n`` (``weights`` default to ones). The fit engine divides
+    by ``R_global · psum(wsum)`` so zero-weight padding rows (fixed-size tail
+    batches) and mesh-sharded (data × rep) training both recover the exact
+    unweighted mean.
     """
     logits = scorer_logits(params, x)  # [R, N, B] fp32
     if cfg.loss == "softmax_bce":
@@ -73,4 +75,21 @@ def scorer_loss(params, cfg: ScorerConfig, x, targets):
     else:
         per = jnp.maximum(logits, 0) - logits * targets + jnp.log1p(
             jnp.exp(-jnp.abs(logits)))
-    return jnp.mean(jnp.sum(per, axis=-1))
+    row = jnp.sum(per, axis=-1)                    # [R, N]
+    if weights is None:
+        weights = jnp.ones((row.shape[1],), jnp.float32)
+    return jnp.sum(row * weights[None, :]), jnp.sum(weights)
+
+
+def scorer_loss(params, cfg: ScorerConfig, x, targets, weights=None):
+    """BCE against multi-hot bucket targets. targets: [R, N, B].
+
+    softmax_bce is the paper's formulation (BCE applied to softmax scores);
+    sigmoid_bce is the standard numerically-clean multi-label variant. Both
+    are exposed; EXPERIMENTS.md compares them. ``weights`` [N] scales each
+    row's contribution (0 = padding row) and the mean ignores zero-weight
+    rows.
+    """
+    s, wsum = scorer_loss_parts(params, cfg, x, targets, weights)
+    R = params["w1"].shape[0]
+    return s / (R * jnp.maximum(wsum, 1.0))

@@ -75,8 +75,13 @@ def kchoice_exact(topk_idx: jnp.ndarray, B: int, key=None,
     def step(load, l):
         cand = topk_idx[l]                     # [K]
         cl = load[cand]
-        # least-loaded; ties -> higher-affinity (earlier) bucket wins
-        j = jnp.argmin(cl + jnp.arange(K, dtype=cl.dtype) * 1e-7)
+        # lexicographic (load, choice-rank) argmin: the FIRST slot attaining
+        # the minimum load wins, so ties go to the higher-affinity (earlier)
+        # bucket at any load magnitude. The previous
+        # ``argmin(cl + arange(K) * 1e-7)`` epsilon is absorbed by float32
+        # once loads reach ~1e7 (exactly the 100M-label regime), leaving the
+        # tie-break to unspecified argmin behaviour.
+        j = jnp.argmax(cl == jnp.min(cl))
         b = cand[j]
         w = 1.0 if weights is None else weights[l]
         return load.at[b].add(w), b
@@ -132,12 +137,39 @@ def kchoice_parallel(topk_val: jnp.ndarray, topk_idx: jnp.ndarray, B: int,
     # hot buckets the cap protected (measured: load_std 250 vs ~8 on a
     # trained, concentrated affinity; §Perf notes)
     cand_loads = load[topk_idx]                        # [L, K]
-    tie = jnp.arange(K, dtype=jnp.float32) * 1e-3      # prefer higher affinity
-    least = jnp.take_along_axis(
-        topk_idx, jnp.argmin(cand_loads.astype(jnp.float32) + tie,
-                             axis=1)[:, None], axis=1)[:, 0]
+    # lexicographic (load, choice-rank): first slot attaining the min load
+    # (ties -> higher affinity) — same overflow-safe rule as kchoice_exact
+    j = jnp.argmax(cand_loads == jnp.min(cand_loads, axis=1, keepdims=True),
+                   axis=1)
+    least = jnp.take_along_axis(topk_idx, j[:, None], axis=1)[:, 0]
     assign = jnp.where(assign < 0, least.astype(jnp.int32), assign)
     return assign
+
+
+def rep_fold_keys(key, rep_ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-repetition keys: fold the GLOBAL rep id into ``key``. Mesh-sharded
+    callers (fit engine) pass their local slice of global ids so a rep draws
+    the same insertion order no matter which shard it lives on."""
+    return jax.vmap(lambda r: jax.random.fold_in(key, r))(rep_ids)
+
+
+def repartition_topk(topk_val: jnp.ndarray, topk_idx: jnp.ndarray, B: int,
+                     mode: str = "exact", rep_keys=None, slack: float = 1.05):
+    """Re-assign from already-reduced top-K affinities [R, L, K] -> [R, L].
+
+    This is the streaming-affinity entry point (fit/affinity.py produces the
+    [R, L, K] pair without ever materializing [R, L, B]); the R independent
+    repetitions run as ONE vmap instead of a Python loop, so the whole call
+    stays inside a single compiled program and the R axis can ride a mesh
+    axis. ``rep_keys`` [R, ...] are per-rep PRNG keys (see rep_fold_keys).
+    """
+    if mode == "exact":
+        if rep_keys is None:
+            return jax.vmap(lambda t: kchoice_exact(t, B))(topk_idx)
+        return jax.vmap(lambda t, kr: kchoice_exact(t, B, kr))(
+            topk_idx, rep_keys)
+    return jax.vmap(lambda v, t: kchoice_parallel(v, t, B, slack))(
+        topk_val, topk_idx)
 
 
 def repartition(affinity: jnp.ndarray, K: int, B: int, mode: str = "exact",
@@ -145,12 +177,5 @@ def repartition(affinity: jnp.ndarray, K: int, B: int, mode: str = "exact",
     """affinity [R, L, B] -> new assign [R, L] + diagnostics."""
     R = affinity.shape[0]
     vals, idxs = jax.lax.top_k(affinity, K)    # [R, L, K]
-
-    outs = []
-    for r in range(R):
-        kr = None if key is None else jax.random.fold_in(key, r)
-        if mode == "exact":
-            outs.append(kchoice_exact(idxs[r], B, kr))
-        else:
-            outs.append(kchoice_parallel(vals[r], idxs[r], B, slack))
-    return jnp.stack(outs)
+    rep_keys = None if key is None else rep_fold_keys(key, jnp.arange(R))
+    return repartition_topk(vals, idxs, B, mode, rep_keys, slack)

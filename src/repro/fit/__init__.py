@@ -1,0 +1,10 @@
+"""Distributed FitEngine: functional fit state, scan-compiled
+train/re-partition rounds, streaming top-K affinity, and mesh-sharded
+(data × rep) training. See docs/fit.md."""
+from repro.fit.affinity import (affinity_topk_ann, affinity_topk_xml,
+                                chunk_xml_pairs)
+from repro.fit.engine import FitData, FitEngine, make_fit_optimizer
+from repro.fit.state import FitState
+
+__all__ = ["FitState", "FitData", "FitEngine", "make_fit_optimizer",
+           "affinity_topk_ann", "affinity_topk_xml", "chunk_xml_pairs"]

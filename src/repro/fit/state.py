@@ -1,0 +1,57 @@
+"""FitState — the whole IRLI fit loop as ONE immutable pytree.
+
+Everything a train/re-partition round mutates lives here (scorer params,
+optimizer state, the [R, L] partition, the PRNG chain, round/epoch
+counters), so a round is a pure ``state -> state`` function that jit can
+donate, ``lax.scan`` can thread, shard_map can shard (the leading-R leaves
+ride the "rep" axis), and the CheckpointManager can round-trip via
+``as_dict``/``from_dict`` (the manager's path-flattener speaks nested
+dicts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FitState:
+    params: Any            # stacked R-rep scorer params (leading axis R)
+    opt_state: Any         # optimizer state (m/v mirror params, step scalar)
+    assign: jnp.ndarray    # [R, L] int32 current partition
+    rng: jnp.ndarray       # PRNG key — advanced once per round (split)
+    round_idx: jnp.ndarray  # int32 scalar: rounds completed
+    epoch_idx: jnp.ndarray  # int32 scalar: total epochs completed
+
+    def as_dict(self) -> dict:
+        """Nested-dict view for checkpointing (CheckpointManager flattens
+        dicts only) and for the Trainer, whose restore path yields dicts."""
+        return {"params": self.params, "opt": self.opt_state,
+                "assign": self.assign, "rng": self.rng,
+                "round": self.round_idx, "epoch": self.epoch_idx}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FitState":
+        """Inverse of :meth:`as_dict`. Leaves are taken as-is (arrays,
+        tracers, or ShapeDtypeStructs when building spec templates)."""
+        return cls(params=d["params"], opt_state=d["opt"],
+                   assign=d["assign"], rng=d["rng"],
+                   round_idx=d["round"], epoch_idx=d["epoch"])
+
+    @classmethod
+    def create(cls, params, opt_state, assign, rng) -> "FitState":
+        return cls(params=params, opt_state=opt_state,
+                   assign=jnp.asarray(assign, jnp.int32),
+                   rng=jnp.asarray(rng),
+                   round_idx=jnp.zeros((), jnp.int32),
+                   epoch_idx=jnp.zeros((), jnp.int32))
+
+
+jax.tree_util.register_pytree_node(
+    FitState,
+    lambda s: ((s.params, s.opt_state, s.assign, s.rng, s.round_idx,
+                s.epoch_idx), None),
+    lambda _, c: FitState(*c))

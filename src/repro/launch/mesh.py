@@ -26,6 +26,17 @@ def make_host_mesh(n_devices: int | None = None, model_axis: int = 1):
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+def make_fit_mesh(n_devices: int | None = None, rep_axis: int = 1):
+    """(data × rep) mesh for the IRLI FitEngine (docs/fit.md): batch rows
+    split over "data" (psum'd grads), the R independent repetitions —
+    params, adam moments, affinity, k-choice, assign — split over "rep".
+    ``rep_axis`` must divide both the device count and the config's
+    n_reps."""
+    n = n_devices or len(jax.devices())
+    assert n % rep_axis == 0
+    return jax.make_mesh((n // rep_axis, rep_axis), ("data", "rep"))
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh made above."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -247,6 +247,57 @@ def build_irli_train_step(scorer_cfg, n_buckets: int, opt_kind="adamw_nomaster",
     return build_train_step(loss_fn, opt_kind, **opt_kw)
 
 
+def build_irli_fit_parts(cfg, x, label_ids, label_mask=None, label_vecs=None,
+                         *, mesh=None, data_seed: int = 0):
+    """Adapt the IRLI FitEngine to the fault-tolerant Trainer: one Trainer
+    step = ONE scan-compiled train/re-partition round (docs/fit.md), so fit
+    runs inherit auto-resume from atomic checkpoints, periodic/final
+    checkpointing, and straggler accounting for free.
+
+    Returns ``(step_fn, init_state, batch_fn)`` for
+    ``Trainer(TrainerConfig(total_steps=<rounds>), *parts, ckpt_dir)``.
+    States are FitState dicts (checkpoint-flattenable); ``batch_fn`` is a
+    pure function of the round index, so a restored run replays the exact
+    batch sequence (bitwise-identical assign + losses,
+    tests/test_fit_engine.py). Pass a (data × rep) ``mesh``
+    (launch/mesh.make_fit_mesh) for the sharded engine.
+    """
+    from repro.core.network import ScorerConfig, scorer_init
+    from repro.core.partition import hash_init
+    from repro.fit.engine import FitData, FitEngine, make_fit_optimizer
+    from repro.fit.state import FitState
+
+    scorer_cfg = ScorerConfig(d_in=cfg.d, d_hidden=cfg.d_hidden,
+                              n_buckets=cfg.n_buckets, n_reps=cfg.n_reps,
+                              loss=cfg.loss)
+    data = FitData.build(x, label_ids, label_mask, label_vecs,
+                         n_labels=cfg.n_labels, chunk=cfg.affinity_chunk)
+    engine = FitEngine(cfg, scorer_cfg)
+    n = data.x.shape[0]
+
+    def init_state():
+        key = jax.random.PRNGKey(cfg.seed)
+        key, k1 = jax.random.split(key)
+        params = scorer_init(k1, scorer_cfg)
+        opt = make_fit_optimizer(cfg)
+        assign = hash_init(cfg.n_labels, cfg.n_buckets, cfg.n_reps, cfg.seed)
+        return FitState.create(params, opt.init(params), assign,
+                               key).as_dict()
+
+    if mesh is None:
+        step_fn = engine.step_fn(data)
+    else:
+        template = jax.eval_shape(init_state)
+        step_fn = engine.sharded_step_fn(mesh, data,
+                                         FitState.from_dict(template))
+
+    def batch_fn(step):
+        idx, w = engine.round_batches(n, data_seed, step)
+        return {"idx": idx, "w": w}
+
+    return step_fn, init_state, batch_fn
+
+
 def build_irli_serve(mesh, m: int, tau: int, k: int, loss_kind="softmax_bce",
                      metric="angular", store_dtype: str = "fp32",
                      store_block: int = 32, refine_k: int = 0):

@@ -49,6 +49,55 @@ def main():
             k = jax.random.PRNGKey(i)
             t = jax.random.randint(k, (4, 64), 0, cfg.vocab)
             return {"tokens": t, "labels": jnp.roll(t, -1, 1)}
+    elif args.arch == "irli":
+        # the paper's own workload: fit rounds (scan-compiled train +
+        # fused re-partition) through the fault-tolerant Trainer, on a
+        # (data × rep) mesh when --devices > 1 (docs/fit.md). --steps counts
+        # ROUNDS here. Shapes come from configs/irli_deep1b.fit_config.
+        from repro.configs.irli_deep1b import fit_config
+        from repro.data.synthetic import clustered_ann
+        from repro.launch.mesh import make_fit_mesh
+
+        cfg = fit_config(reduced=True)
+        data = clustered_ann(n_base=cfg.n_labels, n_queries=32, d=cfg.d,
+                             n_clusters=cfg.n_labels // 20, k_gt=10,
+                             k_train=20, seed=0)
+        n_dev = len(jax.devices())
+        mesh = None
+        if n_dev > 1:
+            # a valid mesh needs rep | n_reps and data | batch_size; prefer
+            # using BOTH axes (4 devices -> 2 x 2: data psum + rep sharding)
+            valid = [r for r in range(1, n_dev + 1)
+                     if n_dev % r == 0 and cfg.n_reps % r == 0
+                     and cfg.batch_size % (n_dev // r) == 0]
+            if not valid:
+                print(f"fit mesh: no (data, rep) split of {n_dev} devices "
+                      f"fits n_reps={cfg.n_reps} / batch={cfg.batch_size}; "
+                      "running single-device")
+            else:
+                rep = 2 if 2 in valid else valid[0]
+                mesh = make_fit_mesh(n_dev, rep_axis=rep)
+                print(f"fit mesh: "
+                      f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+        step, init_state, batch_fn = S.build_irli_fit_parts(
+            cfg, data.train_queries, data.train_gt, label_vecs=data.base,
+            mesh=mesh)
+        tr = Trainer(TrainerConfig(total_steps=args.steps,
+                                   checkpoint_every=max(2, args.steps // 2)),
+                     step, init_state, batch_fn,
+                     os.path.join(args.ckpt, args.arch))
+        out = tr.run()
+        losses = [m["loss"] for m in out["metrics"]]
+        if not losses:       # restored a finished run: nothing left to do
+            print(f"irli: already complete at round {tr.start_step} "
+                  f"(resumed={out['resumed']}); raise --steps to continue")
+            return
+        moved = [m["n_reassigned"] for m in out["metrics"]]
+        print(f"irli: {len(losses)} rounds, loss "
+              f"{losses[0]:.4f} -> {losses[-1]:.4f}, "
+              f"reassigned {moved[0]:.0f} -> {moved[-1]:.0f}, "
+              f"resumed={out['resumed']}")
+        return
     elif args.arch == "schnet":
         from repro.models.gnn import SchNetConfig, schnet_init
         from repro.data.synthetic import molecule_batch

@@ -30,16 +30,29 @@ def constant_schedule(base_lr: float):
 
 
 # ------------------------------------------------------------------- utils --
-def global_norm(tree) -> jnp.ndarray:
+def global_norm_sq(tree) -> jnp.ndarray:
+    """Sum of squares over every leaf (fp32). Exposed separately so mesh
+    programs can psum it across sharded axes before the sqrt (the fit
+    engine's rep-sharded clip)."""
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(global_norm_sq(tree))
+
+
+def apply_clip(grads, norm, max_norm: float):
+    """Scale ``grads`` by min(1, max_norm / (norm + eps)) — the ONE copy of
+    the clipping formula (callers supply a local or collective norm)."""
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
 
 
 def clip_by_global_norm(grads, max_norm: float):
     norm = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
-                        grads), norm
+    return apply_clip(grads, norm, max_norm), norm
 
 
 # ------------------------------------------------------------------- AdamW --

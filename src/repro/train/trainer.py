@@ -82,8 +82,15 @@ class Trainer:
                 self.straggler_steps += 1
             ema = 0.9 * ema + 0.1 * dt if ema else dt
 
-            rec = {k: float(v) for k, v in metrics.items()
-                   if np.ndim(v) == 0}
+            rec = {}
+            for k, v in metrics.items():
+                if np.ndim(v) == 0:
+                    rec[k] = float(v)
+                elif np.ndim(v) == 1 and np.size(v) <= 64:
+                    # small vector metrics (e.g. the IRLI fit round's
+                    # per-epoch losses) are kept as lists; anything larger
+                    # stays out of the log
+                    rec[k] = [float(x) for x in np.asarray(v)]
             rec["step"] = step
             rec["step_time_s"] = dt
             self.metrics_log.append(rec)

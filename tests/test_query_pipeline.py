@@ -172,32 +172,7 @@ def test_server_serves_compact_pipeline():
 
 
 # ----------------------------------------------------- no [Q, L] guarantee --
-def _avals_of(jaxpr):
-    """Every intermediate aval in a jaxpr, recursing into sub-jaxprs
-    (pjit/scan/cond/vmap bodies)."""
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for p in eqn.params.values():
-            yield from _param_avals(p)
-
-
-def _param_avals(p):
-    if hasattr(p, "jaxpr") and hasattr(p, "consts"):      # ClosedJaxpr
-        yield from _avals_of(p.jaxpr)
-    elif hasattr(p, "eqns"):                               # Jaxpr
-        yield from _avals_of(p)
-    elif isinstance(p, (list, tuple)):
-        for q in p:
-            yield from _param_avals(q)
-
-
-def _materializes_QL(fn, args, n_queries, L):
-    closed = jax.make_jaxpr(fn)(*args)
-    return any(n_queries in shape and L in shape
-               for shape in (getattr(a, "shape", ()) or ()
-                             for a in _avals_of(closed.jaxpr))
-               if isinstance(shape, tuple))
+from benchmarks.jaxpr_walk import materializes_dims as _materializes_QL
 
 
 QL_N_QUERIES, QL_L = 6, 4096    # distinctive dims: nothing else is 6 x 4096

@@ -201,29 +201,11 @@ def test_bf16_store_close_to_fp32():
 
 
 # ------------------------------------------------------ memory guarantee ----
-def _avals_of(jaxpr):
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for p in eqn.params.values():
-            yield from _param_avals(p)
-
-
-def _param_avals(p):
-    if hasattr(p, "jaxpr") and hasattr(p, "consts"):
-        yield from _avals_of(p.jaxpr)
-    elif hasattr(p, "eqns"):
-        yield from _avals_of(p)
-    elif isinstance(p, (list, tuple)):
-        for q in p:
-            yield from _param_avals(q)
+from benchmarks.jaxpr_walk import traced_shapes
 
 
 def _f32_shapes(fn, args):
-    closed = jax.make_jaxpr(fn)(*args)
-    return [tuple(a.shape) for a in _avals_of(closed.jaxpr)
-            if getattr(a, "dtype", None) == jnp.float32
-            and getattr(a, "shape", None)]
+    return traced_shapes(fn, args, jnp.float32)
 
 
 ST_L, ST_D, ST_Q, ST_C = 4096, 32, 6, 48    # distinctive dims
