@@ -69,6 +69,8 @@ def run(csv=True):
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived}")
+    from benchmarks import trajectory
+    trajectory.record("compact_vs_dense", rows)
     return rows
 
 

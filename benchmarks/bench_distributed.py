@@ -74,6 +74,8 @@ def run(csv=True):
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived}")
+    from benchmarks import trajectory
+    trajectory.record("distributed", rows)
     return rows
 
 

@@ -212,6 +212,9 @@ def run(csv=True, toy=False):
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived}")
+    if not toy:     # --toy shapes would pollute the longitudinal baseline
+        from benchmarks import trajectory
+        trajectory.record("fit", rows)
     return rows
 
 

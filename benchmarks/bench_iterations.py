@@ -54,6 +54,8 @@ def run(csv=True):
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived}")
+    from benchmarks import trajectory
+    trajectory.record("iterations", rows)
     return rows
 
 

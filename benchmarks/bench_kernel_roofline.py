@@ -1,0 +1,105 @@
+"""Per-kernel roofline: lower the two serving hot-spot kernels —
+``frequency_topC`` (FrequentOnes compact candidate counting) and
+``quant_coarse_topk`` (fused int8 dequant + coarse rerank) — through their
+REAL dispatch sites at serving shapes, count flops + HBM traffic from the
+compiled HLO (hlo_analysis.analyze_hlo), time them, and report achieved
+bandwidth against the TPU v5e peaks in roofline.py (kernel_roofline).
+
+Each row is also pushed through the obs.MetricRegistry as
+``kernel_achieved_gbps{kernel=...}`` / ``kernel_roofline_frac{kernel=...}``
+gauges, so a scrape during a bench run sees the same numbers the CSV
+prints. On this CPU container the peak fractions are cross-platform
+reference points (peaks are chip numbers), but the flops/bytes counts and
+the relative trend across commits — what TRAJECTORY.jsonl tracks — are
+real either way.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernel_roofline
+"""
+import time
+
+import numpy as np
+
+N_TIMED = 5
+
+
+def _timed(fn, *args):
+    """Median-of-N wall-clock seconds per call for a jitted fn (first call
+    compiles and is discarded)."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(N_TIMED):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _analyze(fn, *args):
+    """flops + hbm bytes of the kernel's own compiled module."""
+    from benchmarks.hlo_analysis import analyze_hlo
+    import jax
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo(txt)
+
+
+def run(csv=True, registry=None):
+    import jax.numpy as jnp
+
+    from benchmarks.roofline import kernel_roofline
+    from repro import obs
+    from repro.core.query import frequency_topC
+    from repro.kernels.quant_rerank.ops import quant_coarse_topk
+
+    reg = obs.get_registry(registry)
+    rng = np.random.default_rng(0)
+    rows, cases = [], []
+
+    # serving shapes: Q queries x (R reps * m probes * bucket width) gathered
+    # candidates over an L-row corpus shard (docs/search_api.md)
+    Q, W, C, L, D, BLOCK, K = 64, 2048, 256, 1 << 14, 64, 32, 32
+    cands = jnp.asarray(rng.integers(0, L, (Q, W)), jnp.int32)
+
+    def freq_fn(c):
+        return frequency_topC(c, C)
+
+    cases.append((f"freq_topc_Q{Q}xW{W}_C{C}", freq_fn, (cands,)))
+
+    queries = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    codes = jnp.asarray(rng.integers(-127, 128, (L, D)), jnp.int8)
+    scales = jnp.asarray(rng.uniform(0.01, 0.1, (L, D // BLOCK)), jnp.float32)
+    cand_ids = jnp.asarray(rng.integers(0, L, (Q, C)), jnp.int32)
+    cand_counts = jnp.asarray(rng.integers(1, 5, (Q, C)), jnp.float32)
+
+    def quant_fn(q, co, sc, ci, cc):
+        return quant_coarse_topk(q, co, sc, ci, cc, tau=1, k=K,
+                                 metric="angular")
+
+    cases.append((f"quant_rerank_Q{Q}xC{C}_L{L}", quant_fn,
+                  (queries, codes, scales, cand_ids, cand_counts)))
+
+    for name, fn, args in cases:
+        counts = _analyze(fn, *args)
+        sec = _timed(fn, *args)
+        rl = kernel_roofline(name, sec, counts["flops"],
+                             counts["hbm_bytes"])
+        labels = {"kernel": name}
+        reg.gauge("kernel_achieved_gbps", labels).set(rl["achieved_gbps"])
+        reg.gauge("kernel_roofline_frac", labels).set(rl["frac_of_roofline"])
+        reg.gauge("kernel_hbm_bytes", labels).set(float(counts["hbm_bytes"]))
+        rows.append((f"kernel/{name}", sec * 1e6,
+                     f"gbps={rl['achieved_gbps']:.2f}"
+                     f"(peak={rl['peak_gbps']:.0f});"
+                     f"bound={rl['bound']};"
+                     f"frac_v5e_roofline={rl['frac_of_roofline']:.4f}"))
+
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived}")
+    from benchmarks import trajectory
+    trajectory.record("kernel_roofline", rows, registry=reg)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -38,6 +38,8 @@ def run(csv=True):
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived:.2f}")
+    from benchmarks import trajectory
+    trajectory.record("load_balance", rows)
     return rows
 
 

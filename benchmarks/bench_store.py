@@ -117,6 +117,9 @@ def run(csv=True, toy=False):
         base_rec = by[(L, "fp32")]["recall10"]
         slack = 0.002 if tag == "int8+exact" else 0.05
         assert r["recall10"] >= base_rec - slack, (r, base_rec)
+    if not toy:     # --toy shapes would pollute the longitudinal baseline
+        from benchmarks import trajectory
+        trajectory.record("store", rows)
     return rows
 
 

@@ -79,6 +79,8 @@ def run(csv=True):
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived:.3f}")
+    from benchmarks import trajectory
+    trajectory.record("streaming", rows)
     return rows
 
 

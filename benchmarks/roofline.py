@@ -147,6 +147,28 @@ def model_flops(arch, shape, n_dev=256):
     return recsys_model_flops(arch, shape)
 
 
+def kernel_roofline(name, seconds, flops, hbm_bytes):
+    """Achieved-vs-peak for ONE measured kernel invocation — the live
+    counterpart of build(): HLO-counted flops/bytes (hlo_analysis.analyze_hlo
+    over the kernel's own compiled module) plus a wall-clock timing, instead
+    of dry-run artifacts. Peaks are the TPU v5e chip numbers above, so on
+    the CPU container ``frac_of_roofline`` is a cross-platform reference
+    point rather than a local efficiency claim (benchmarks.
+    bench_kernel_roofline records both and pushes them through the metrics
+    registry)."""
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm_bytes / HBM_BW
+    return {
+        "name": name, "seconds": seconds,
+        "flops": flops, "hbm_bytes": hbm_bytes,
+        "achieved_gflops": flops / seconds / 1e9 if seconds > 0 else 0.0,
+        "achieved_gbps": hbm_bytes / seconds / 1e9 if seconds > 0 else 0.0,
+        "peak_gbps": HBM_BW / 1e9,
+        "bound": "compute" if t_c >= t_m else "memory",
+        "frac_of_roofline": max(t_c, t_m) / seconds if seconds > 0 else 0.0,
+    }
+
+
 # ------------------------------------------------------------- the table ----
 def build(mesh: str, use_corrected: bool = True):
     with open(os.path.join(ART, f"dryrun_{mesh}.json")) as f:

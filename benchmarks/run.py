@@ -2,8 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only <name>]
 
-Prints ``name,us_per_call,derived`` CSV rows. The roofline table
-(`python -m benchmarks.roofline`) reads the dry-run artifacts instead.
+Prints ``name,us_per_call,derived`` CSV rows; every bench also appends its
+rows to ``artifacts/TRAJECTORY.jsonl`` (benchmarks/trajectory.py), and the
+sweep ends with a >20% latency-regression gate over that history (opt out
+with ``--no-check``). The roofline table (`python -m benchmarks.roofline`)
+reads the dry-run artifacts instead.
 """
 import argparse
 import sys
@@ -21,15 +24,23 @@ BENCHES = [
     ("iterations", "benchmarks.bench_iterations", "paper Fig 4 / Table 4"),
     ("xml", "benchmarks.bench_xml", "paper Tables 1-2"),
     ("distributed", "benchmarks.bench_distributed", "paper Figs 5-6"),
+    ("streaming", "benchmarks.bench_streaming",
+     "mutable index: insert/delete/compact throughput + recall"),
+    ("kernel_roofline", "benchmarks.bench_kernel_roofline",
+     "freq_topc + quant_rerank achieved-vs-peak bandwidth"),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the TRAJECTORY.jsonl >20%% regression gate "
+                         "(e.g. deliberately slower debug builds)")
     args = ap.parse_args()
 
     import importlib
+    from benchmarks import trajectory
     print("name,us_per_call,derived")
     failures = 0
     for name, mod, what in BENCHES:
@@ -43,7 +54,14 @@ def main() -> None:
         except Exception as e:
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
-    sys.exit(1 if failures else 0)
+    if failures:
+        sys.exit(1)
+    if not args.no_check:
+        # every bench above appended its rows to artifacts/TRAJECTORY.jsonl;
+        # fail the sweep loudly on any >20% latency regression vs history
+        trajectory.enforce()
+        print("# trajectory: no regressions", file=sys.stderr)
+    sys.exit(0)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,160 @@
+"""Longitudinal perf trajectory — every bench run appends its headline
+numbers to ``artifacts/TRAJECTORY.jsonl`` (one JSON row per metric, schema
+below), building a queryable perf history across commits:
+
+    {"name": "store/int8_rerank", "value": 1234.0, "unit": "us_per_call",
+     "derived": 0.98, "bench": "store", "git_rev": "4c9f52b",
+     "ts": 1754650000.0}
+
+``record`` is called from every ``benchmarks/bench_*.py`` at the end of its
+``run()`` (rows are the same ``(name, us_per_call, derived)`` tuples the
+CSV prints, so the two outputs can never disagree); ``check`` compares each
+metric's newest value against the MEDIAN of its prior recordings and fails
+loudly on a >``REGRESSION_FACTOR``x latency regression — the guard
+``benchmarks/run.py`` runs after every full sweep (opt out with
+``--no-check``, e.g. on deliberately slower debug builds).
+
+    PYTHONPATH=src python -m benchmarks.trajectory --check   # gate only
+    PYTHONPATH=src python -m benchmarks.trajectory           # print history
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+DEFAULT_PATH = os.path.join(ART, "TRAJECTORY.jsonl")
+
+#: latest > REGRESSION_FACTOR * median(prior) => regression (the issue's
+#: ">20%" gate)
+REGRESSION_FACTOR = 1.2
+
+#: units where LARGER is WORSE (latency-like); other units are informational
+#: and never gate
+_LATENCY_UNITS = ("us_per_call", "us", "ms", "s", "seconds")
+
+
+def git_rev() -> str:
+    """Short git revision of the working tree ('unknown' outside a repo)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def record(bench: str, rows, unit: str = "us_per_call",
+           path: str | None = None, registry=None) -> list:
+    """Append one JSONL row per ``(name, value, derived)`` bench tuple.
+
+    ``derived`` is the bench's second column (recall, std, bytes ratio, ...)
+    and rides along untyped. A ``registry`` (obs.MetricRegistry) mirrors
+    each value as a ``bench_value{bench=...,name=...}`` gauge. Returns the
+    written row dicts."""
+    path = path or DEFAULT_PATH
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    rev, ts = git_rev(), time.time()
+    written = []
+    with open(path, "a", encoding="utf-8") as fh:
+        for name, value, derived in rows:
+            row = {"name": str(name), "value": float(value), "unit": unit,
+                   "derived": (float(derived)
+                               if isinstance(derived, (int, float))
+                               else derived),
+                   "bench": bench, "git_rev": rev, "ts": ts}
+            fh.write(json.dumps(row) + "\n")
+            written.append(row)
+            if registry is not None:
+                registry.gauge("bench_value",
+                               {"bench": bench, "name": str(name)}
+                               ).set(float(value))
+    return written
+
+
+def load(path: str | None = None) -> list:
+    """All trajectory rows, oldest first. Malformed lines are skipped (a
+    crashed writer must not poison the whole history)."""
+    path = path or DEFAULT_PATH
+    if not os.path.exists(path):
+        return []
+    rows = []
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(row, dict) and "name" in row and "value" in row:
+                rows.append(row)
+    return rows
+
+
+def check(path: str | None = None,
+          factor: float = REGRESSION_FACTOR) -> list:
+    """Regression gate: for every latency-unit metric with >= 2 recordings,
+    compare the NEWEST value against the median of all PRIOR values.
+    Returns a list of human-readable failure strings (empty = pass).
+
+    Median-of-priors (not just the previous run) keeps one historic noisy
+    sample from either masking or faking a regression."""
+    by_name: dict = {}
+    for row in load(path):
+        if row.get("unit") in _LATENCY_UNITS and row["value"] > 0:
+            by_name.setdefault(row["name"], []).append(row["value"])
+    failures = []
+    for name, vals in sorted(by_name.items()):
+        if len(vals) < 2:
+            continue
+        baseline = statistics.median(vals[:-1])
+        if baseline > 0 and vals[-1] > factor * baseline:
+            failures.append(
+                f"{name}: {vals[-1]:.0f} vs median {baseline:.0f} "
+                f"({vals[-1] / baseline:.2f}x > {factor:.2f}x)")
+    return failures
+
+
+def enforce(path: str | None = None,
+            factor: float = REGRESSION_FACTOR) -> None:
+    """``check`` + loud failure: prints every regression and exits 1."""
+    failures = check(path, factor)
+    if failures:
+        print(f"PERF REGRESSION ({len(failures)} metric"
+              f"{'s' if len(failures) != 1 else ''} > "
+              f"{(factor - 1) * 100:.0f}% over baseline):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any >20%% latency regression")
+    ap.add_argument("--path", default=None)
+    args = ap.parse_args()
+    if args.check:
+        enforce(args.path)
+        print("trajectory: no regressions")
+        return
+    rows = load(args.path)
+    for row in rows:
+        print(f"{row.get('ts', 0):.0f} {row.get('git_rev', '?'):>8s} "
+              f"{row['name']:40s} {row['value']:12.1f} "
+              f"{row.get('unit', '')} derived={row.get('derived')}")
+    print(f"# {len(rows)} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ XML mode (label sets per train point; Def. 1 affinity).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +77,8 @@ class IRLIIndex:
 
     # ---------------------------------------------------------------- fit --
     def fit(self, x_train, label_ids, label_mask=None, label_vecs=None,
-            verbose: bool = False, mesh=None) -> FitStats:
+            verbose: bool = False, mesh=None, registry=None,
+            log=None) -> FitStats:
         """x_train [N,d]; label_ids [N,k] (ANN: k exact neighbors; XML: padded
         label sets); label_vecs [L,d] enables Def.2 affinity (ANN mode).
 
@@ -87,6 +89,12 @@ class IRLIIndex:
         "until re-assignments converge" stop. Pass a (data × rep) ``mesh``
         (launch/mesh.make_fit_mesh) to shard batches over "data" (psum'd
         grads) and the R repetitions over "rep" — docs/fit.md.
+
+        ``registry`` (an ``obs.MetricRegistry``) receives per-round fit
+        telemetry — loss/grad-norm, re-partition churn, and the paper's
+        load-balance summary (bucket min/max/std and KL-vs-uniform) — and
+        ``log`` (an ``obs.MetricsLogger``) gets one JSONL row per round
+        (docs/observability.md). Both default to off/None.
         """
         cfg = self.cfg
         data = FitData.build(x_train, label_ids, label_mask, label_vecs,
@@ -108,7 +116,10 @@ class IRLIIndex:
         stats = FitStats([], [], [], [], [])
         for rnd in range(cfg.rounds):
             idx, w = engine.round_batches(n, cfg.seed, rnd)
+            t0 = time.perf_counter()
             state, met = round_fn(state, idx, w)
+            met = jax.tree.map(np.asarray, met)   # one host sync per round
+            dt = time.perf_counter() - t0
             n_re = int(met["n_reassigned"])
             loss = float(met["loss"])
             lstd = float(met["load_std"])
@@ -118,6 +129,9 @@ class IRLIIndex:
             stats.train_loss.append(loss)
             stats.epoch_loss.append(
                 [float(l) for l in np.asarray(met["epoch_loss"])])
+            row = self._record_fit_round(rnd, met, dt, registry)
+            if log is not None:
+                log.log(row, step=rnd)
             if verbose:
                 print(f"[irli] round {rnd}: loss={loss:.4f} "
                       f"reassigned={n_re} load_std={lstd:.2f}")
@@ -130,6 +144,33 @@ class IRLIIndex:
         self.key = state.rng
         self.build_index()
         return stats
+
+    def _record_fit_round(self, rnd: int, met: dict, seconds: float,
+                          registry) -> dict:
+        """Flatten one round's engine metrics into a JSONL-able row and,
+        when ``registry`` is given, mirror them as ``fit_*`` gauges (churn
+        normalized to re-assignments per (rep, label) slot) — the
+        load-balance family (std/min/max/KL-vs-uniform) is the paper's §4
+        balance metric, now observable per round."""
+        cfg = self.cfg
+        row = {"round": rnd, "seconds": seconds,
+               "loss": float(met["loss"]),
+               "n_reassigned": int(met["n_reassigned"]),
+               "churn": float(met["n_reassigned"])
+               / float(cfg.n_reps * cfg.n_labels),
+               "load_std": float(met["load_std"])}
+        for key in ("grad_norm", "load_min", "load_max", "load_kl"):
+            if key in met:
+                row[key] = float(met[key])
+        if registry is not None:
+            registry.counter("fit_rounds_total").inc()
+            registry.gauge("fit_round_seconds").set(seconds)
+            for key, val in row.items():
+                if key in ("round", "seconds"):
+                    continue
+                registry.gauge(f"fit_{key}" if not key.startswith("fit_")
+                               else key).set(val)
+        return row
 
     def build_index(self):
         max_load = int(self.cfg.max_load_slack
@@ -145,8 +186,8 @@ class IRLIIndex:
                              loss_kind=self.cfg.loss)
 
     def search(self, queries, base, params: SA.SearchParams | None = None,
-               *, cache: SA.PipelineCache | None = None, m=None, tau=None,
-               k=None, metric=None, mode=None, topC=None):
+               *, cache: SA.PipelineCache | None = None, staged: bool = False,
+               m=None, tau=None, k=None, metric=None, mode=None, topC=None):
         """Candidate generation + true-distance re-rank over ``base``.
 
         Typed path: ``search(queries, base, SearchParams(...))`` ->
@@ -161,6 +202,11 @@ class IRLIIndex:
         ``search_api.DEFAULT_CACHE``), so equal params + shapes never
         recompile.
 
+        ``staged=True`` serves through the per-stage debug mode (each stage
+        separately jitted + fenced, timed into the cache's registry under
+        ``serve_stage_seconds{stage=...}``) — bit-identical results, see
+        docs/observability.md.
+
         The bare ``m=/tau=/k=/metric=/mode=/topC=`` kwargs are a deprecated
         shim returning the old ``(ids, n_candidates)`` tuple.
         """
@@ -169,21 +215,23 @@ class IRLIIndex:
             params = SA.params_from_legacy_kwargs(
                 "IRLIIndex.search", m=m, tau=tau, k=k, metric=metric,
                 mode=mode, topC=topC)
-            res = self._search_typed(queries, base, params, cache)
+            res = self._search_typed(queries, base, params, cache,
+                                     staged=staged)
             return res.ids, res.n_candidates
         SA.check_params("IRLIIndex.search", params)
         if any(v is not None for v in (m, tau, k, metric, mode, topC)):
             raise TypeError("pass either SearchParams or legacy kwargs, "
                             "not both")
-        return self._search_typed(queries, base, params, cache)
+        return self._search_typed(queries, base, params, cache, staged=staged)
 
     def _search_typed(self, queries, base, params: SA.SearchParams,
-                      cache: SA.PipelineCache | None) -> SA.SearchResult:
+                      cache: SA.PipelineCache | None, *,
+                      staged: bool = False) -> SA.SearchResult:
         cache = cache if cache is not None else SA.DEFAULT_CACHE
         if not hasattr(base, "codes"):        # raw corpus; stores pass as-is
             base = jnp.asarray(base)
         return cache.search(params, self.params, self.index.members,
-                            base, jnp.asarray(queries))
+                            base, jnp.asarray(queries), staged=staged)
 
     def as_searcher(self, base, cache: SA.PipelineCache | None = None
                     ) -> SA.Searcher:

@@ -29,6 +29,7 @@ the compact rerank runs coarse-on-codes + exact refine of the top
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -307,13 +308,10 @@ class QueryPipeline:
             cands = mask_tombstones(cands, tombstone)
         return cands
 
-    def search(self, params, members, base, queries, delta_members=None,
-               tombstone=None):
-        """Full serving path -> (ids [Q, k] with -1 pad, scores [Q, k],
-        n_candidates [Q]). base rows are indexed by the member ids — a raw
-        [L, d] array (corpus shard / streaming vector buffer) or a
-        :class:`~repro.store.quantized.QuantizedStore` over the same rows.
-        """
+    def resolve_store(self, base):
+        """Validate ``base`` against ``store_dtype`` and return the
+        QuantizedStore if one was passed (else None). Shared by the fused
+        :meth:`search` and the staged debug path :meth:`search_staged`."""
         from repro.store.quantized import QuantizedStore
         store = base if isinstance(base, QuantizedStore) else None
         if store is not None and store.dtype != self.store_dtype:
@@ -325,6 +323,16 @@ class QueryPipeline:
                 f"pipeline store_dtype={self.store_dtype!r} needs a "
                 "QuantizedStore base, got a raw array — encode it first "
                 "(repro.store.encode)")
+        return store
+
+    def search(self, params, members, base, queries, delta_members=None,
+               tombstone=None):
+        """Full serving path -> (ids [Q, k] with -1 pad, scores [Q, k],
+        n_candidates [Q]). base rows are indexed by the member ids — a raw
+        [L, d] array (corpus shard / streaming vector buffer) or a
+        :class:`~repro.store.quantized.QuantizedStore` over the same rows.
+        """
+        store = self.resolve_store(base)
         cands = self.candidates(params, members, queries, delta_members,
                                 tombstone)
         if self.mode == "compact":
@@ -352,6 +360,129 @@ class QueryPipeline:
         scores, ids = jax.lax.top_k(sim, self.k)
         ids = jnp.where(jnp.isfinite(scores), ids, -1)
         return ids, scores, jnp.sum(mask, axis=1)
+
+    def search_staged(self, params, members, base, queries,
+                      delta_members=None, tombstone=None, *, registry=None):
+        """Per-stage debug mode of :meth:`search`: the SAME primitive
+        sequence, but each serving stage is a separately-jitted call fenced
+        with ``jax.block_until_ready`` and timed into the
+        ``serve_stage_seconds{stage=...}`` histogram of ``registry``
+        (repro.obs; default registry when None). Returns bit-identical
+        (ids, scores, n_candidates) — pinned by
+        tests/test_obs_integration.py — at the cost of losing cross-stage
+        fusion and async dispatch, so it is a diagnosis tool, not the
+        serving path.
+        """
+        from repro import obs
+        reg = obs.get_registry(registry)
+        store = self.resolve_store(base)
+
+        def run(stage, fn, *args):
+            with obs.trace(reg, "serve_stage_seconds", stage=stage) as sp:
+                return sp.fence(fn(self, *args))
+
+        logits = run("scorer_logits", _stage_logits, params, queries)
+        bidx = run("top_m", _stage_topm, logits)
+        cands = run("gather", _stage_gather, members, bidx, delta_members,
+                    tombstone)
+        if self.mode == "compact":
+            cid, cnt, n_cand = run("freq_topc", _stage_freq_topc, cands)
+            if store is not None and store.dtype != "fp32":
+                cids = run("quant_rerank", _stage_quant_coarse, queries,
+                           store, cid, cnt)
+                ids, scores = run("refine", _stage_quant_refine, queries,
+                                  store, cids)
+            else:
+                rows = store.codes if store is not None else base
+                ids, scores = run("rerank", _stage_rerank_gathered, queries,
+                                  rows, cid, cnt)
+            return ids, scores, n_cand
+        rows = store.codes if store is not None else base
+        freq = run("freq_dense", _stage_freq_dense, cands, rows)
+        return run("rerank", _stage_rerank_dense, queries, rows, freq)
+
+
+# ------------------------------------------------- staged-mode jit units ----
+# One jitted function per serving stage, with the (frozen, hashable)
+# QueryPipeline as a static arg so each (pipeline, shapes) pair compiles
+# once and re-traces never. Module-level — NOT closures inside
+# search_staged — so jit caches persist across calls. Each body is the
+# verbatim slice of the fused search()/candidates() code it mirrors: the
+# staged-vs-fused bit-identity pin (acceptance criterion) rests on the op
+# sequences being the same.
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_logits(pipe: QueryPipeline, params, queries):
+    del pipe                                      # uniform (pipe, *args) ABI
+    return scorer_logits(params, queries)
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_topm(pipe: QueryPipeline, logits):
+    _, bidx = jax.lax.top_k(logits, pipe.m)
+    return bidx
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_gather(pipe: QueryPipeline, members, bidx, delta_members,
+                  tombstone):
+    del pipe
+    cands = gather_members(members, bidx, delta_members)
+    if tombstone is not None:
+        cands = mask_tombstones(cands, tombstone)
+    return cands
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_freq_topc(pipe: QueryPipeline, cands):
+    cid, cnt = frequency_topC(cands, pipe.topC)
+    n_cand = jnp.sum((cid >= 0) & (cnt >= pipe.tau), axis=1)
+    return cid, cnt, n_cand
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_rerank_gathered(pipe: QueryPipeline, queries, rows, cid, cnt):
+    return rerank_gathered(queries, rows, cid, cnt, pipe.tau, pipe.k,
+                           pipe.metric)
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_quant_coarse(pipe: QueryPipeline, queries, store, cid, cnt):
+    from repro.store.rerank import coarse_stage
+    return coarse_stage(queries, store, cid, cnt, tau=pipe.tau, k=pipe.k,
+                        refine_k=pipe.refine_k, metric=pipe.metric)
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_quant_refine(pipe: QueryPipeline, queries, store, cids):
+    from repro.store.rerank import refine_stage
+    return refine_stage(queries, store, cids, k=pipe.k, metric=pipe.metric)
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_freq_dense(pipe: QueryPipeline, cands, rows):
+    del pipe
+    return candidate_frequencies_dense(cands, rows.shape[0])
+
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_rerank_dense(pipe: QueryPipeline, queries, rows, freq):
+    mask = freq >= pipe.tau
+    sim = jnp.where(mask, pairwise_sim(queries, rows, pipe.metric),
+                    -jnp.inf)
+    scores, ids = jax.lax.top_k(sim, pipe.k)
+    ids = jnp.where(jnp.isfinite(scores), ids, -1)
+    return ids, scores, jnp.sum(mask, axis=1)
+
+
+@partial(jax.jit, static_argnames=("m",))
+def probe_buckets(params, queries, m: int):
+    """Just the probe: top-m bucket ids [R, Q, m] per query. The serve-time
+    load-observability hook (and the LIRA access-frequency prerequisite):
+    IRLIServer feeds these ids into its per-bucket probe-frequency
+    VectorCounter without re-running the full pipeline."""
+    logits = scorer_logits(params, queries)
+    return jax.lax.top_k(logits, m)[1]
 
 
 def query_members(params, members: jnp.ndarray, queries, *, m: int, tau: int,

@@ -164,14 +164,30 @@ class PipelineCache:
     catches retraces from a changed delta/tombstone structure under one
     key). Thread-safe: the server batcher and client threads share one
     instance.
+
+    Observability (docs/observability.md): lookups mirror into
+    ``cache_{hits,misses,compiles}_total`` counters of ``registry`` (the
+    process-wide ``obs.DEFAULT_REGISTRY`` when None), and :meth:`search`
+    times the FIRST invocation of every fresh entry — trace + XLA compile +
+    first run, fenced — into the ``cache_compile_seconds`` histogram. The
+    legacy ``stats()`` dict keeps its exact four-key shape.
     """
 
-    def __init__(self):
+    def __init__(self, registry=None):
         self._fns: dict = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.compiles = 0
+        self._registry = registry
+
+    @property
+    def registry(self):
+        """The metrics registry this cache records into (resolved lazily so
+        a bare ``PipelineCache()`` built before obs configuration still
+        lands in the process default)."""
+        from repro import obs
+        return obs.get_registry(self._registry)
 
     def __len__(self) -> int:
         return len(self._fns)
@@ -184,10 +200,10 @@ class PipelineCache:
         with self._lock:
             self._fns.clear()
 
-    def get(self, params: SearchParams, n_labels: int, q_bucket: int):
-        """The jitted search fn for one resolved-params/corpus/batch key:
-        ``fn(scorer_params, members, base, queries, delta_members,
-        tombstone) -> (ids, scores, n_candidates)``."""
+    def _lookup(self, params: SearchParams, n_labels: int, q_bucket: int):
+        """:meth:`get` plus a freshness bit -> (fn, fresh). ``fresh`` means
+        the entry was just built, i.e. the fn's first call will trace and
+        compile — :meth:`search` uses it to time compile latency."""
         if params.mode == "auto":
             raise ValueError("PipelineCache keys need resolved params — "
                              "call params.resolve(n_labels, q_batch) first")
@@ -196,32 +212,61 @@ class PipelineCache:
             fn = self._fns.get(key)
             if fn is not None:
                 self.hits += 1
-                return fn
+                self.registry.counter("cache_hits_total").inc()
+                return fn, False
             self.misses += 1
+            self.registry.counter("cache_misses_total").inc()
             pipe = params.pipeline()
 
             def run(scorer_params, members, base, queries, delta_members,
                     tombstone):
                 self.compiles += 1      # trace-time only: counts compilations
+                self.registry.counter("cache_compiles_total").inc()
                 return pipe.search(scorer_params, members, base, queries,
                                    delta_members, tombstone)
 
             fn = jax.jit(run)
             self._fns[key] = fn
-            return fn
+            return fn, True
+
+    def get(self, params: SearchParams, n_labels: int, q_bucket: int):
+        """The jitted search fn for one resolved-params/corpus/batch key:
+        ``fn(scorer_params, members, base, queries, delta_members,
+        tombstone) -> (ids, scores, n_candidates)``."""
+        return self._lookup(params, n_labels, q_bucket)[0]
 
     def search(self, params: SearchParams, scorer_params, members, base,
                queries, delta_members=None, tombstone=None, *,
-               epoch: int = 0) -> SearchResult:
+               epoch: int = 0, staged: bool = False) -> SearchResult:
         """Resolve params against this corpus/batch, fetch-or-compile the
         pipeline, run it, and wrap the typed result. ``base`` is the raw
         [L, d] corpus or a QuantizedStore over it (checked against
-        ``params.store_dtype``)."""
+        ``params.store_dtype``).
+
+        ``staged=True`` routes through the per-stage debug mode
+        (``QueryPipeline.search_staged``): same primitive sequence, each
+        stage separately jitted + fenced and timed into this cache's
+        registry under ``serve_stage_seconds{stage=...}``. Results are
+        bit-identical to the fused path."""
         check_store("PipelineCache.search", params, base)
         resolved = params.resolve(int(base.shape[0]), int(queries.shape[0]))
-        fn = self.get(resolved, base.shape[0], queries.shape[0])
-        ids, scores, n_cand = fn(scorer_params, members, base, queries,
-                                 delta_members, tombstone)
+        if staged:
+            pipe = resolved.pipeline()
+            ids, scores, n_cand = pipe.search_staged(
+                scorer_params, members, base, queries, delta_members,
+                tombstone, registry=self.registry)
+            return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
+                                epoch=epoch, mode=resolved.mode)
+        fn, fresh = self._lookup(resolved, base.shape[0], queries.shape[0])
+        if fresh:
+            from repro import obs
+            with obs.trace(self.registry, "cache_compile_seconds") as sp:
+                ids, scores, n_cand = sp.fence(
+                    fn(scorer_params, members, base, queries, delta_members,
+                       tombstone))
+        else:
+            ids, scores, n_cand = fn(scorer_params, members, base, queries,
+                                     delta_members, tombstone)
         return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
                             epoch=epoch, mode=resolved.mode)
 

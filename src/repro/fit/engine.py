@@ -228,9 +228,9 @@ class FitEngine:
             norm = jnp.sqrt(psum_rep(global_norm_sq(grads)))
             grads = apply_clip(grads, norm, self.clip_norm)
             params, opt_state, _ = self.opt.update(params, grads, opt_state)
-            return (params, opt_state), (psum_rep(part), wsum)
+            return (params, opt_state), (psum_rep(part), wsum, norm)
 
-        (params, opt_state), (losses, wsums) = jax.lax.scan(
+        (params, opt_state), (losses, wsums, norms) = jax.lax.scan(
             train_step, (state.params, state.opt_state), (idx, w))
         # per-epoch weighted means (weights = real rows per batch), then the
         # per-round mean of per-epoch means — the loop-variable leak in the
@@ -251,13 +251,26 @@ class FitEngine:
         n_re = psum_rep(jnp.sum(new_assign != assign))
         ld = PT.loads(new_assign, cfg.n_buckets).astype(jnp.float32)
         lstd = psum_rep(jnp.sum(jnp.std(ld, axis=1))) / R_glob
+        # the paper's load-balance summary of the NEW partition: bucket
+        # min/max across all reps and mean per-rep KL(p || uniform)
+        # (0 = perfectly balanced, log B = one hot bucket) — the per-round
+        # counterpart of obs.load_balance_stats at serve time
+        lmin, lmax = jnp.min(ld), jnp.max(ld)
+        if rep_ax:
+            lmin = jax.lax.pmin(lmin, rep_ax)
+            lmax = jax.lax.pmax(lmax, rep_ax)
+        p = ld / jnp.maximum(jnp.sum(ld, axis=1, keepdims=True), 1.0)
+        kl = jnp.where(p > 0, p * jnp.log(p * cfg.n_buckets), 0.0)
+        lkl = psum_rep(jnp.sum(kl)) / R_glob
 
         new_state = FitState(params=params, opt_state=opt_state,
                              assign=new_assign, rng=next_rng,
                              round_idx=state.round_idx + 1,
                              epoch_idx=state.epoch_idx + E)
         metrics = {"loss": round_loss, "epoch_loss": epoch_loss,
-                   "n_reassigned": n_re, "load_std": lstd}
+                   "n_reassigned": n_re, "load_std": lstd,
+                   "grad_norm": jnp.mean(norms), "load_min": lmin,
+                   "load_max": lmax, "load_kl": lkl}
         return new_state, metrics
 
     @property
@@ -323,7 +336,9 @@ class FitEngine:
             body, mesh=mesh,
             in_specs=(specs, batch_spec, batch_spec, data_specs),
             out_specs=(specs, {"loss": P(), "epoch_loss": P(),
-                               "n_reassigned": P(), "load_std": P()}),
+                               "n_reassigned": P(), "load_std": P(),
+                               "grad_norm": P(), "load_min": P(),
+                               "load_max": P(), "load_kl": P()}),
             **SHARD_MAP_COMPAT_KW)
 
         def round_fn(state, idx, w):

@@ -1,0 +1,108 @@
+"""Observability smoke (CI): one registry must end up holding every metric
+family the telemetry subsystem promises (docs/observability.md).
+
+Fits a tiny index for one round, then serves 32 requests through a staged
+IRLIServer over a streaming index (so inserts/deletes/compaction record
+too), and asserts the registry snapshot is non-empty and contains:
+
+  - fit-round load-balance + training metrics (fit_churn, fit_load_kl,
+    fit_load_min/max, fit_grad_norm, fit_loss)
+  - per-stage serve latency histograms (serve_stage_seconds{stage=...})
+  - per-bucket probe-frequency vector (serve_bucket_probes) with its
+    KL-vs-uniform load summary
+  - batching + cache counters (serve_requests_total, queue wait,
+    cache_hits/misses/compiles)
+  - streaming gauges (stream_live, stream_delta_occupancy, ...)
+
+No HTTP port is opened — the point is that the registry itself is complete
+even with exposition off.
+
+    PYTHONPATH=src python -m repro.launch.obs_smoke
+"""
+import numpy as np
+
+
+def main():
+    from repro import obs
+    from repro.core.index import IRLIIndex, IRLIConfig
+    from repro.core.search_api import SearchParams
+    from repro.data.synthetic import clustered_ann
+    from repro.serve.server import IRLIServer
+    from repro.stream import MutableIRLIIndex
+
+    registry = obs.MetricRegistry()
+    n_base, n_req = 512, 32
+    data = clustered_ann(n_base=n_base, n_queries=n_req, d=16,
+                         n_clusters=16, seed=0)
+
+    # ---- fit: 1 round, telemetry into the shared registry ----------------
+    cfg = IRLIConfig(d=16, n_labels=n_base, n_buckets=32, n_reps=2,
+                     d_hidden=32, K=5, rounds=1, epochs_per_round=2,
+                     batch_size=128, seed=0)
+    idx = IRLIIndex(cfg)
+    idx.fit(data.train_queries, data.train_gt, label_vecs=data.base,
+            registry=registry)
+    snap = registry.snapshot()
+    for key in ("fit_rounds_total", "fit_loss", "fit_grad_norm", "fit_churn",
+                "fit_load_std", "fit_load_min", "fit_load_max",
+                "fit_load_kl"):
+        assert key in snap, f"fit metric {key!r} missing: {sorted(snap)}"
+    assert snap["fit_load_kl"]["value"] >= 0.0
+
+    # ---- serve: 32 staged requests + mutations through the server --------
+    midx = MutableIRLIIndex(idx, data.base, capacity=2 * n_base,
+                            registry=registry)
+    # mode pinned compact: the 100M-scale serving path (and its freq_topc
+    # stage) is the one the smoke must prove observable
+    server = IRLIServer(midx,
+                        params=SearchParams(m=4, tau=1, k=10, mode="compact"),
+                        max_batch=16, max_wait_ms=1.0, registry=registry,
+                        staged=True)
+    try:
+        futs = [server.submit(data.queries[i]) for i in range(n_req)]
+        results = [f.result(timeout=600) for f in futs]
+        assert all(r.ids.shape == (10,) for r in results)
+        ins = server.insert(np.asarray(data.queries[:4], np.float32))
+        new_ids = ins.result(timeout=600)
+        server.delete(new_ids[:2]).result(timeout=600)
+        server.search(data.queries[0], timeout=600)   # post-mutation epoch
+    finally:
+        server.close()
+    midx.compact()
+    # the fused path (staged mode bypasses the jit cache by design) must
+    # record cache lookups + first-call compile latency: miss, then hit
+    fused = SearchParams(m=4, tau=1, k=10, mode="compact")
+    for _ in range(2):
+        midx.search(data.queries[:8], fused, cache=server.cache)
+
+    snap = registry.snapshot()
+    assert snap, "registry snapshot is empty"
+    stages = sorted(k for k in snap if k.startswith("serve_stage_seconds"))
+    assert stages, f"no per-stage histograms: {sorted(snap)}"
+    for stage in ("scorer_logits", "top_m", "gather", "freq_topc"):
+        assert any(f'stage="{stage}"' in k for k in stages), \
+            f"stage {stage!r} missing from {stages}"
+    for key in ("serve_requests_total", "serve_batches_total",
+                "serve_queue_wait_seconds", "serve_batch_seconds",
+                "serve_candidates", "serve_bucket_probes",
+                "serve_mutations_total", "cache_hits_total",
+                "cache_misses_total", "cache_compiles_total",
+                "cache_compile_seconds", "stream_inserts_total",
+                "stream_deletes_total", "stream_compactions_total",
+                "stream_live", "stream_delta_occupancy",
+                "stream_tombstone_ratio"):
+        assert key in snap, f"serve metric {key!r} missing: {sorted(snap)}"
+    assert snap["serve_requests_total"]["value"] >= n_req
+    probes = snap["serve_bucket_probes"]
+    assert probes["sum"] > 0 and "kl_vs_uniform" in probes
+    # the exposition path must render the same registry
+    text = registry.to_text()
+    assert "serve_requests_total" in text and "_bucket{" in text
+
+    print(f"obs smoke OK: {len(snap)} series, "
+          f"{len(stages)} stage histograms, "
+          f"probe KL={probes['kl_vs_uniform']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,14 @@ requests carries a per-request SearchParams override (wider probe), so the
 run also exercises the server's params-grouped micro-batching.
 
     PYTHONPATH=src python -m repro.launch.serve [--requests 256] [--base 4096]
+        [--metrics-port 9100] [--staged] [--metrics-log PATH.jsonl]
+
+--metrics-port exposes the run's MetricRegistry over HTTP (GET /metrics for
+Prometheus text, /metrics.json for the raw snapshot) while serving;
+--staged serves every request through the per-stage debug pipeline
+(bit-identical results, per-stage latency histograms); --metrics-log
+appends per-fit-round rows + a final registry snapshot as JSONL
+(docs/observability.md).
 
 (The production 512-chip serving program is exercised by
 ``launch/dryrun.py --arch irli-deep1b --shape serve_query``.)
@@ -21,12 +29,27 @@ def main():
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--base", type=int, default=4096)
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="expose /metrics on this port (0 = off)")
+    ap.add_argument("--staged", action="store_true",
+                    help="serve through the per-stage debug pipeline")
+    ap.add_argument("--metrics-log", default="",
+                    help="append fit rounds + final snapshot to this JSONL")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.core.index import IRLIIndex, IRLIConfig
     from repro.core.search_api import SearchParams
     from repro.data.synthetic import clustered_ann
     from repro.serve.server import IRLIServer
+
+    registry = obs.MetricRegistry()
+    mlog = obs.MetricsLogger(args.metrics_log) if args.metrics_log else None
+    http_srv = None
+    if args.metrics_port:
+        http_srv = obs.start_metrics_server(registry, args.metrics_port)
+        print(f"metrics on http://{http_srv.server_address[0]}:"
+              f"{http_srv.server_address[1]}/metrics")
 
     data = clustered_ann(n_base=args.base, n_queries=args.requests, d=16,
                          n_clusters=max(2, args.base // 20), seed=0)
@@ -35,12 +58,14 @@ def main():
                      d_hidden=96, K=10, rounds=args.rounds, epochs_per_round=3,
                      batch_size=512, lr=2e-3, seed=0)
     idx = IRLIIndex(cfg)
-    idx.fit(data.train_queries, data.train_gt, label_vecs=data.base)
+    idx.fit(data.train_queries, data.train_gt, label_vecs=data.base,
+            registry=registry, log=mlog)
 
     default = SearchParams(m=4, tau=1, k=10)
     wide = default.replace(m=8)           # per-request override: probe wider
     server = IRLIServer(idx, params=default, base=data.base,
-                        max_batch=64, max_wait_ms=2.0)
+                        max_batch=64, max_wait_ms=2.0,
+                        registry=registry, staged=args.staged)
     futs, lat = [], []
     t0 = time.time()
     for i in range(args.requests):
@@ -60,6 +85,20 @@ def main():
           f"p95={lat[int(len(lat) * .95)]:.1f} "
           f"p99={lat[int(len(lat) * .99)]:.1f}")
     print(f"stats={server.stats}")
+    snap = registry.snapshot()
+    qw = snap.get("serve_queue_wait_seconds", {})
+    print(f"registry: {len(snap)} series; queue_wait n={qw.get('count', 0)} "
+          f"mean={qw.get('sum', 0.0) / max(qw.get('count', 1), 1) * 1e3:.2f}ms")
+    if args.staged:
+        stages = [k for k in snap if k.startswith("serve_stage_seconds")]
+        print(f"staged: {len(stages)} stage histograms "
+              f"({', '.join(sorted(stages))})")
+    if mlog is not None:
+        mlog.log_snapshot(registry)
+        mlog.close()
+        print(f"metrics log -> {args.metrics_log}")
+    if http_srv is not None:
+        http_srv.shutdown()
     server.close()
 
 

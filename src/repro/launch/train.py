@@ -18,6 +18,9 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
     ap.add_argument("--devices", type=int, default=0,
                     help="fake host devices (0 = real)")
+    ap.add_argument("--metrics-log", default="",
+                    help="append per-step metric rows to this JSONL file "
+                         "(obs.MetricsLogger, docs/observability.md)")
     args = ap.parse_args()
 
     if args.devices:
@@ -32,6 +35,17 @@ def main():
     from repro.train.trainer import Trainer, TrainerConfig
 
     rng = np.random.default_rng(0)
+
+    def dump_metrics(out, start=0):
+        """Append the run's per-step metric rows (already host scalars via
+        Trainer.run's conversion) as one JSONL row per step."""
+        if not args.metrics_log:
+            return
+        from repro import obs
+        with obs.MetricsLogger(args.metrics_log) as mlog:
+            for i, m in enumerate(out["metrics"]):
+                mlog.log(dict(m, arch=args.arch), step=start + i)
+        print(f"metrics log -> {args.metrics_log}")
 
     if args.arch in ("gemma-7b", "yi-6b", "qwen3-4b", "mixtral-8x7b",
                      "llama4-maverick-400b-a17b"):
@@ -97,6 +111,7 @@ def main():
               f"{losses[0]:.4f} -> {losses[-1]:.4f}, "
               f"reassigned {moved[0]:.0f} -> {moved[-1]:.0f}, "
               f"resumed={out['resumed']}")
+        dump_metrics(out, tr.start_step)
         return
     elif args.arch == "schnet":
         from repro.models.gnn import SchNetConfig, schnet_init
@@ -140,6 +155,7 @@ def main():
     losses = [m["loss"] for m in out["metrics"]]
     print(f"{args.arch}: {len(losses)} steps, loss "
           f"{losses[0]:.4f} -> {losses[-1]:.4f}, resumed={out['resumed']}")
+    dump_metrics(out, tr.start_step)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,46 @@
+"""repro.obs — the metrics/tracing substrate (docs/observability.md).
+
+One :class:`MetricRegistry` per deployment surface (a server, a fit run,
+the obs smoke) plus a process-wide :data:`DEFAULT_REGISTRY` for call sites
+that are not handed one explicitly (mirrors ``search_api.DEFAULT_CACHE``).
+
+    from repro import obs
+
+    reg = obs.MetricRegistry()
+    reg.counter("serve_requests_total").inc()
+    with obs.trace(reg, "serve_stage_seconds", stage="rerank") as sp:
+        out = sp.fence(fn(x))          # block_until_ready -> honest timing
+    print(reg.to_text())               # Prometheus-style exposition
+
+This package is a LEAF of the dependency graph: it imports nothing from
+``repro.core``/``repro.fit``/... so every subsystem can record into it
+without cycles.
+"""
+from repro.obs.logger import MetricsLogger
+from repro.obs.registry import (COUNT_BUCKETS, LATENCY_BUCKETS, Counter,
+                                Gauge, Histogram, MetricRegistry,
+                                VectorCounter, bucket_index,
+                                load_balance_stats, log_buckets,
+                                merge_snapshots)
+from repro.obs.trace import Span, fence, trace
+
+#: Process-wide default registry: surfaces that aren't handed a private
+#: registry record here (e.g. ``search_api.DEFAULT_CACHE``'s counters).
+DEFAULT_REGISTRY = MetricRegistry()
+
+
+def get_registry(registry: "MetricRegistry | None" = None) -> MetricRegistry:
+    """The registry to record into: the one given, else the default."""
+    return registry if registry is not None else DEFAULT_REGISTRY
+
+
+# exposition imports http.server; keep it lazy-light but exported
+from repro.obs.exposition import start_metrics_server  # noqa: E402
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "VectorCounter", "MetricRegistry",
+    "MetricsLogger", "Span", "trace", "fence", "log_buckets", "bucket_index",
+    "merge_snapshots", "load_balance_stats", "LATENCY_BUCKETS",
+    "COUNT_BUCKETS", "DEFAULT_REGISTRY", "get_registry",
+    "start_metrics_server",
+]

@@ -1,0 +1,54 @@
+"""HTTP exposition of a MetricRegistry (``launch/serve.py --metrics-port``).
+
+GET /metrics       Prometheus-style text (``MetricRegistry.to_text``)
+GET /metrics.json  the raw ``snapshot()`` dict as JSON
+
+Runs a ThreadingHTTPServer on a daemon thread; ``start_metrics_server``
+returns the server so callers can ``shutdown()`` it. Port 0 binds an
+ephemeral port (tests read ``server.server_address``).
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.obs.registry import MetricRegistry
+
+__all__ = ["start_metrics_server"]
+
+
+def _make_handler(registry: MetricRegistry):
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.split("?")[0] == "/metrics":
+                body = registry.to_text().encode()
+                ctype = "text/plain; version=0.0.4"
+            elif self.path.split("?")[0] == "/metrics.json":
+                body = json.dumps(registry.snapshot()).encode()
+                ctype = "application/json"
+            else:
+                self.send_response(404)
+                self.end_headers()
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):    # scrapes must not spam stderr
+            pass
+
+    return Handler
+
+
+def start_metrics_server(registry: MetricRegistry, port: int,
+                         host: str = "0.0.0.0") -> ThreadingHTTPServer:
+    """Serve ``registry`` on ``host:port`` from a daemon thread. Returns the
+    running server; call ``server.shutdown()`` to stop scraping."""
+    server = ThreadingHTTPServer((host, port), _make_handler(registry))
+    thread = threading.Thread(target=server.serve_forever, daemon=True,
+                              name="obs-metrics-exposition")
+    thread.start()
+    return server

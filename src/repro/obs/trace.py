@@ -1,0 +1,69 @@
+"""Span/trace — wall-clock attribution with explicit device fencing.
+
+jax dispatch is asynchronous: ``t1 - t0`` around a jitted call measures
+Python dispatch, not device work. A :class:`Span` therefore exposes
+``fence(x)`` — ``jax.block_until_ready`` on the stage's OUTPUT — so the
+recorded duration covers exactly the device work needed to produce that
+output, attributed to the right stage:
+
+    with trace(registry, "serve_stage_seconds", stage="freq_topc") as sp:
+        cid, cnt = sp.fence(freq_fn(cands))
+
+Durations come from ``time.perf_counter`` (monotonic) and land in the
+registry histogram named by ``name`` with the given labels (default bounds:
+``LATENCY_BUCKETS``, 1us..100s log-spaced). A span records on exit even
+when the body raises — failed requests still show up in the latency
+distribution rather than silently vanishing.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.obs.registry import LATENCY_BUCKETS, MetricRegistry
+
+__all__ = ["Span", "trace", "fence"]
+
+
+def fence(x):
+    """Block until every array in ``x`` (any pytree) is computed; returns
+    ``x``. The explicit synchronization point that makes host-side timing
+    attribute device work to the right stage."""
+    return jax.block_until_ready(x)
+
+
+class Span:
+    """Context manager timing one stage into a registry histogram.
+
+    Attributes after exit: ``seconds`` (the recorded duration). Reentrant
+    use is not supported — make a new Span per stage.
+    """
+
+    def __init__(self, registry: MetricRegistry, name: str,
+                 labels: dict | None = None, bounds=LATENCY_BUCKETS):
+        self._hist = registry.histogram(name, labels, bounds)
+        self.name = name
+        self.labels = dict(labels or {})
+        self.seconds: float | None = None
+        self._t0: float | None = None
+
+    def fence(self, x):
+        """``jax.block_until_ready`` on this stage's output; returns it."""
+        return fence(x)
+
+    def __enter__(self) -> "Span":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        self._hist.observe(self.seconds)
+        return False
+
+
+def trace(registry: MetricRegistry, name: str, *, bounds=LATENCY_BUCKETS,
+          **labels) -> Span:
+    """Sugar: ``with trace(reg, "serve_stage_seconds", stage="gather") as sp``
+    — labels are keyword arguments."""
+    return Span(registry, name, labels or None, bounds)

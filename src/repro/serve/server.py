@@ -44,6 +44,8 @@ from concurrent.futures import Future, InvalidStateError
 
 import numpy as np
 
+from repro import obs
+from repro.core import query as Q
 from repro.core import search_api as SA
 from repro.core.search_api import PipelineCache, SearchParams, SearchResult
 
@@ -83,6 +85,8 @@ class IRLIServer:
     def __init__(self, index, *, params: SearchParams | None = None,
                  max_batch: int = 512, max_wait_ms: float = 2.0,
                  base=None, cache: PipelineCache | None = None,
+                 registry: "obs.MetricRegistry | None" = None,
+                 staged: bool = False, probe_stats: bool = True,
                  m=None, tau=None, k=None, metric=None, mode=None, topC=None):
         legacy = (params is None
                   and any(v is not None
@@ -107,16 +111,21 @@ class IRLIServer:
         self.max_wait = max_wait_ms / 1000.0
         self.base = base
         self.buckets = _bucket_ladder(max_batch)
-        self.cache = cache if cache is not None else PipelineCache()
+        # per-server registry by default: two servers must not mix their
+        # request counters (pass one explicitly to aggregate deliberately)
+        self.registry = (registry if registry is not None
+                         else obs.MetricRegistry())
+        self.staged = staged
+        self.cache = (cache if cache is not None
+                      else PipelineCache(registry=self.registry))
         # mutable (stream.MutableIRLIIndex) indexes carry their own vector
         # buffer and mutation API; frozen IRLIIndex needs ``base`` to rerank
         self._mutable = hasattr(index, "insert") and hasattr(index, "delete")
         self._searcher = self._bind_searcher()
+        self._probe = self._bind_probe() if probe_stats else None
         self.q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
-        self._stats = {"batches": 0, "requests": 0, "pad_waste": 0,
-                       "param_groups": 0, "mutations": 0,
-                       "epoch": getattr(index, "epoch", 0)}
+        self.registry.gauge("serve_epoch").set(getattr(index, "epoch", 0))
         self.thread = threading.Thread(target=self._loop, daemon=True)
         self.thread.start()
 
@@ -131,19 +140,66 @@ class IRLIServer:
         search = getattr(self.index, "search", None)
         if search is None:
             return None
-        takes_cache = "cache" in inspect.signature(search).parameters
-        ckw = {"cache": self.cache} if takes_cache else {}
+        sig = inspect.signature(search).parameters
+        ckw = {"cache": self.cache} if "cache" in sig else {}
+        if self.staged:
+            if "staged" not in sig:
+                raise TypeError(
+                    "staged=True needs a backend whose search() takes a "
+                    f"staged kwarg; {type(self.index).__name__}.search "
+                    "does not")
+            ckw["staged"] = True
         if not self._mutable and self.base is not None:
             return lambda qs, p: search(qs, self.base, p, **ckw)
         if self._mutable or not hasattr(self.index, "query"):
             return lambda qs, p: search(qs, p, **ckw)
         return None     # frozen index, no corpus: candidate-mask fallback
 
+    def _bind_probe(self):
+        """Per-bucket probe-frequency observability (the LIRA access-stats
+        prerequisite): find the scorer params + (R, B) geometry on the
+        wrapped index — frozen IRLIIndex directly, MutableIRLIIndex via its
+        inner ``.index`` — and a flat [R·B] VectorCounter to count into.
+        Returns None (disabled) when the backend exposes neither."""
+        for src in (self.index, getattr(self.index, "index", None)):
+            cfg = getattr(src, "cfg", None)
+            if (cfg is not None and hasattr(src, "params")
+                    and hasattr(cfg, "n_reps") and hasattr(cfg, "n_buckets")):
+                R, B = int(cfg.n_reps), int(cfg.n_buckets)
+                return src, R, B, self.registry.vector("serve_bucket_probes",
+                                                       R * B)
+        return None
+
+    def _record_probes(self, queries, n: int, m: int) -> None:
+        """Count which (rep, bucket) cells this batch probed into the
+        ``serve_bucket_probes`` vector. Runs the probe head only (top-m on
+        scorer logits, jitted per (m, shape)); pad rows are sliced off so
+        padding never inflates a bucket's load."""
+        src, R, B, vec = self._probe
+        bidx = np.asarray(Q.probe_buckets(src.params, queries, m))[:, :n, :]
+        flat = (np.arange(R)[:, None, None] * B + bidx).ravel()
+        vec.inc_at(flat)
+
     @property
     def stats(self) -> dict:
         """Counters snapshot, including the pipeline-cache hit/miss/compile
-        counts (per-request params must not mean per-request compiles)."""
-        return dict(self._stats, cache=self.cache.stats())
+        counts (per-request params must not mean per-request compiles).
+
+        A VIEW over ``self.registry`` (the counters live there now — the
+        old ``_stats`` dict was mutated from the batcher thread without a
+        lock) kept in the legacy dict shape; the full picture is
+        ``self.registry.snapshot()``."""
+        reg = self.registry
+        return {
+            "batches": int(reg.counter("serve_batches_total").value),
+            "requests": int(reg.counter("serve_requests_total").value),
+            "pad_waste": int(reg.counter("serve_pad_waste_total").value),
+            "param_groups": int(
+                reg.counter("serve_param_groups_total").value),
+            "mutations": int(reg.counter("serve_mutations_total").value),
+            "epoch": int(reg.gauge("serve_epoch").value),
+            "cache": self.cache.stats(),
+        }
 
     # ------------------------------------------------------------- client --
     def _enqueue(self, op: str, payload) -> Future:
@@ -151,7 +207,7 @@ class IRLIServer:
         if self._stop.is_set():   # closed: fail fast instead of hanging
             fut.set_exception(RuntimeError("IRLIServer is closed"))
             return fut
-        self.q.put((op, payload, fut))
+        self.q.put((op, payload, fut, time.perf_counter()))
         # close() may have set _stop and drained BETWEEN the check above and
         # the put — then nobody will ever pop this item, so fail it here
         # (this path, the drain, and the batcher all use the race-safe
@@ -200,8 +256,8 @@ class IRLIServer:
                     "frozen index")
             res = (self.index.insert(payload) if op == "insert"
                    else self.index.delete(payload))
-            self._stats["mutations"] += 1
-            self._stats["epoch"] = self.index.epoch
+            self.registry.counter("serve_mutations_total").inc()
+            self.registry.gauge("serve_epoch").set(self.index.epoch)
             _fulfill(fut, res)                      # caller may have cancelled
         except Exception as e:                      # surface to the caller
             _fail(fut, e)
@@ -209,6 +265,8 @@ class IRLIServer:
     def _run_batch(self, batch, params: SearchParams):
         n = len(batch)
         nb = self._bucket(n)
+        reg = self.registry
+        t0 = time.perf_counter()
         try:
             # stack/pad inside the try: one malformed query (wrong shape)
             # must fail ITS batch, not kill the batcher thread
@@ -217,10 +275,15 @@ class IRLIServer:
                 queries = np.concatenate(
                     [queries, np.repeat(queries[-1:], nb - n, 0)])
             if self._searcher is not None:
+                if self._probe is not None:
+                    self._record_probes(queries, n, params.m)
                 res: SearchResult = self._searcher(queries, params)
                 ids = np.asarray(res.ids)
                 scores = np.asarray(res.scores)
                 n_cand = np.asarray(res.n_candidates)
+                reg.histogram("serve_candidates",
+                              bounds=obs.COUNT_BUCKETS).observe_many(
+                                  n_cand[:n])
                 if self._legacy_results:
                     out = [ids[i] for i in range(n)]
                 else:
@@ -236,9 +299,14 @@ class IRLIServer:
             for _, fut in batch:
                 _fail(fut, e)
             return
-        self._stats["batches"] += 1
-        self._stats["requests"] += n
-        self._stats["pad_waste"] += nb - n
+        # the np.asarray conversions above already synchronized, so this
+        # duration covers dispatch + compute, not just dispatch
+        reg.histogram("serve_batch_seconds").observe(time.perf_counter() - t0)
+        reg.histogram("serve_batch_fill",
+                      bounds=obs.COUNT_BUCKETS).observe(n)
+        reg.counter("serve_batches_total").inc()
+        reg.counter("serve_requests_total").inc(n)
+        reg.counter("serve_pad_waste_total").inc(nb - n)
         for i, (_, fut) in enumerate(batch):
             _fulfill(fut, out[i])                   # cancelled while queued
 
@@ -247,6 +315,10 @@ class IRLIServer:
         pending = None   # barrier popped mid-collection: a mutation, or a
         #                  query whose params differ from the open group
         while not self._stop.is_set():
+            # queue wait = enqueue -> first pop by the batcher (a parked
+            # barrier item is observed at its ORIGINAL pop below, never
+            # again when taken up here)
+            wait_hist = self.registry.histogram("serve_queue_wait_seconds")
             if pending is not None:
                 item, pending = pending, None
             else:
@@ -254,7 +326,9 @@ class IRLIServer:
                     item = self.q.get(timeout=0.1)
                 except queue.Empty:
                     continue
-            op, payload, fut = item
+                if len(item) > 3:   # tolerate raw 3-tuples (tests, clients)
+                    wait_hist.observe(time.perf_counter() - item[3])
+            op, payload, fut = item[:3]
             if op != "query":
                 self._apply_mutation(op, payload, fut)
                 continue
@@ -269,11 +343,13 @@ class IRLIServer:
                     nxt = self.q.get(timeout=timeout)
                 except queue.Empty:
                     break
+                if len(nxt) > 3:
+                    wait_hist.observe(time.perf_counter() - nxt[3])
                 if nxt[0] != "query" or nxt[1][1] != group_params:
                     pending = nxt        # barrier: serve this group first
                     break
                 batch.append((nxt[1][0], nxt[2]))
-            self._stats["param_groups"] += 1
+            self.registry.counter("serve_param_groups_total").inc()
             self._run_batch(batch, group_params)
         # loop exited with an item parked: fail it directly — re-queueing
         # would race with close()'s drain (which may already have finished)
@@ -293,7 +369,7 @@ class IRLIServer:
             self.thread.join(timeout=5)
         while True:
             try:
-                _, _, fut = self.q.get_nowait()
+                fut = self.q.get_nowait()[2]
             except queue.Empty:
                 break
             if fut is not None:

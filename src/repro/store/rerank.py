@@ -31,13 +31,13 @@ def resolve_refine_k(refine_k: int, k: int, topC: int) -> int:
     return max(k, min(kp, topC))
 
 
-def rerank_two_stage(queries, store: QuantizedStore, cand_ids, cand_counts,
-                     *, tau: int, k: int, refine_k: int = 0,
-                     metric: str = "angular"):
-    """queries [Q, d], cand_ids/cand_counts [Q, C] (the frequency_topC
-    output) -> (ids [Q, k] with -1 where no candidate survived,
-    scores [Q, k] EXACT similarities, -inf on pads). Same contract as
-    core/query.rerank_gathered, which is the fp32 single-stage analogue."""
+def coarse_stage(queries, store: QuantizedStore, cand_ids, cand_counts, *,
+                 tau: int, k: int, refine_k: int = 0,
+                 metric: str = "angular"):
+    """Stage 1 alone: coarse top-k' survivor ids [Q, k'] (-1 pads) on
+    gathered quantized code rows. Exposed separately so the pipeline's
+    ``staged=True`` debug mode can fence and time it apart from the refine
+    (core/query.QueryPipeline.search_staged)."""
     # lazy: the dispatch module imports store.quantized, so a module-level
     # import here would cycle through the package __init__ (same idiom as
     # core/query.frequency_topC's kernel dispatch)
@@ -47,6 +47,25 @@ def rerank_two_stage(queries, store: QuantizedStore, cand_ids, cand_counts,
     cids, _ = quant_coarse_topk(queries, store.codes, store.scales,
                                 cand_ids, cand_counts, tau=tau, k=kp,
                                 metric=metric, chunk=kp)
+    return cids
+
+
+def rerank_two_stage(queries, store: QuantizedStore, cand_ids, cand_counts,
+                     *, tau: int, k: int, refine_k: int = 0,
+                     metric: str = "angular"):
+    """queries [Q, d], cand_ids/cand_counts [Q, C] (the frequency_topC
+    output) -> (ids [Q, k] with -1 where no candidate survived,
+    scores [Q, k] EXACT similarities, -inf on pads). Same contract as
+    core/query.rerank_gathered, which is the fp32 single-stage analogue."""
+    cids = coarse_stage(queries, store, cand_ids, cand_counts, tau=tau,
+                        k=k, refine_k=refine_k, metric=metric)
+    return refine_stage(queries, store, cids, k=k, metric=metric)
+
+
+def refine_stage(queries, store: QuantizedStore, cids, *, k: int,
+                 metric: str = "angular"):
+    """Stage 2 alone: exact fp32 re-score of the k' coarse survivors ->
+    (ids [Q, k], scores [Q, k])."""
     safe = jnp.maximum(cids, 0)
     # the refine runs even without an exact tier (dequant rows score the
     # same VALUES the coarse stage saw): coarse then only SELECTS the k'

@@ -99,9 +99,14 @@ class MutableIRLIIndex:
 
     def __init__(self, index: IRLIIndex, base_vecs, capacity: int | None = None,
                  delta_len: int | None = None, store_dtype: str = "fp32",
-                 store_block: int = 32):
+                 store_block: int = 32, registry=None):
         assert index.index is not None, "fit() or build_index() first"
         self.cfg = index.cfg
+        # streaming telemetry (docs/observability.md): mutation counters,
+        # delta-occupancy / tombstone-ratio gauges, compaction timings —
+        # None routes to the process-wide obs.DEFAULT_REGISTRY
+        from repro import obs
+        self.registry = obs.get_registry(registry)
         base_vecs = np.asarray(base_vecs, np.float32)
         L, d = base_vecs.shape
         assert L == self.cfg.n_labels, (L, self.cfg.n_labels)
@@ -166,8 +171,8 @@ class MutableIRLIIndex:
                            L=self.capacity, loss_kind=self.cfg.loss)
 
     def search(self, queries, params: SA.SearchParams | None = None, *,
-               cache: SA.PipelineCache | None = None, m=None, tau=None,
-               k=None, metric=None, mode=None, topC=None):
+               cache: SA.PipelineCache | None = None, staged: bool = False,
+               m=None, tau=None, k=None, metric=None, mode=None, topC=None):
         """Candidate generation + true-distance re-rank over the LIVE corpus
         (base + inserted - deleted).
 
@@ -183,16 +188,17 @@ class MutableIRLIIndex:
             params = SA.params_from_legacy_kwargs(
                 "MutableIRLIIndex.search", m=m, tau=tau, k=k, metric=metric,
                 mode=mode, topC=topC)
-            res = self._search_typed(queries, params, cache)
+            res = self._search_typed(queries, params, cache, staged=staged)
             return res.ids, res.n_candidates
         SA.check_params("MutableIRLIIndex.search", params)
         if any(v is not None for v in (m, tau, k, metric, mode, topC)):
             raise TypeError("pass either SearchParams or legacy kwargs, "
                             "not both")
-        return self._search_typed(queries, params, cache)
+        return self._search_typed(queries, params, cache, staged=staged)
 
     def _search_typed(self, queries, params: SA.SearchParams,
-                      cache: SA.PipelineCache | None) -> SA.SearchResult:
+                      cache: SA.PipelineCache | None, *,
+                      staged: bool = False) -> SA.SearchResult:
         s = self._snapshot          # ONE read: a consistent view throughout
         cache = cache if cache is not None else SA.DEFAULT_CACHE
         if params.store_dtype == "fp32":
@@ -208,7 +214,21 @@ class MutableIRLIIndex:
             base = dataclasses.replace(s.store, exact=s.vecs)
         return cache.search(params, s.params, s.members, base,
                             jnp.asarray(queries), s.delta.members,
-                            s.tombstone, epoch=s.epoch)
+                            s.tombstone, epoch=s.epoch, staged=staged)
+
+    def _record_state_gauges(self) -> None:
+        """Refresh the streaming state gauges from the CURRENT snapshot
+        (called after every mutation, under ``_mu``): live count, epoch,
+        mean delta-segment occupancy (fill / DL), tombstone ratio."""
+        s = self._snapshot
+        reg = self.registry
+        dead = int(jnp.sum(s.tombstone[:s.n_total])) if s.n_total else 0
+        DL = s.delta.members.shape[2]
+        reg.gauge("stream_live").set(s.n_total - dead)
+        reg.gauge("stream_epoch").set(s.epoch)
+        reg.gauge("stream_delta_occupancy").set(
+            float(jnp.mean(s.delta.fill)) / max(DL, 1))
+        reg.gauge("stream_tombstone_ratio").set(dead / max(s.n_total, 1))
 
     # ----------------------------------------------------------- mutation --
     def insert(self, vecs) -> np.ndarray:
@@ -229,7 +249,10 @@ class MutableIRLIIndex:
                 raise ValueError(
                     f"capacity exceeded: {self._snapshot.n_total} + "
                     f"{vecs.shape[0]} > {self.capacity}")
-            return self._insert_locked(vecs)
+            ids = self._insert_locked(vecs)
+            self.registry.counter("stream_inserts_total").inc(len(ids))
+            self._record_state_gauges()
+            return ids
 
     def _insert_locked(self, vecs: np.ndarray) -> np.ndarray:
         cfg = self.cfg
@@ -290,6 +313,7 @@ class MutableIRLIIndex:
             live_ids = ids[alive]
             if live_ids.size == 0:
                 return 0
+            self.registry.counter("stream_deletes_total").inc(live_ids.size)
             # decrement live loads at each rep's bucket of the dying ids
             a = np.asarray(s.assign[:, live_ids])                # [R, n]
             dec = np.stack([np.bincount(a[r], minlength=self.cfg.n_buckets)
@@ -299,6 +323,7 @@ class MutableIRLIIndex:
                 tombstone=s.tombstone.at[jnp.asarray(live_ids)].set(True),
                 load=s.load - jnp.asarray(dec, jnp.int32),
                 epoch=s.epoch + 1)
+            self._record_state_gauges()
             return int(live_ids.size)
 
     def compact(self) -> None:
@@ -306,9 +331,18 @@ class MutableIRLIIndex:
         matrix (atomic snapshot swap). Query results are EXACTLY preserved:
         the per-bucket live member sets — hence candidate frequencies, hence
         re-ranked ids — are identical before and after."""
+        from repro import obs
         with self._mu:
-            self._snapshot = compaction.compact_snapshot(
-                self._snapshot, self.cfg.n_buckets)
+            with obs.trace(self.registry,
+                           "stream_compaction_seconds") as sp:
+                new = compaction.compact_snapshot(self._snapshot,
+                                                  self.cfg.n_buckets)
+                # fence the rebuilt arrays (the snapshot dataclass itself is
+                # not a pytree), so the span covers the device rebuild
+                sp.fence((new.members, new.load, new.delta.members))
+                self._snapshot = new
+            self.registry.counter("stream_compactions_total").inc()
+            self._record_state_gauges()
 
     # ------------------------------------------------------- checkpointing --
     def state_dict(self, snapshot: StreamSnapshot | None = None) -> dict:

@@ -1,0 +1,276 @@
+"""Observability substrate (repro.obs + benchmarks.trajectory): histogram
+bucket math at the edges, snapshot merge associativity (hypothesis property
+tests where available), Prometheus text exposition, Span/fence tracing, the
+JSONL MetricsLogger, and the longitudinal perf-trajectory regression gate.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.registry import (COUNT_BUCKETS, LATENCY_BUCKETS, Histogram,
+                                bucket_index, load_balance_stats,
+                                log_buckets, merge_snapshots)
+
+
+# ------------------------------------------------------------ bucket math --
+def test_log_buckets_shape():
+    for lo, hi, pd in ((1e-6, 1e2, 3), (1.0, 1e6, 4), (0.5, 7.0, 1)):
+        b = log_buckets(lo, hi, pd)
+        assert b[0] == lo and b[-1] >= hi
+        assert list(b) == sorted(set(b)), "bounds must be strictly ascending"
+    with pytest.raises(ValueError, match="lo"):
+        log_buckets(0.0, 1.0)
+    with pytest.raises(ValueError, match="per_decade"):
+        log_buckets(1.0, 10.0, 0)
+
+
+def test_bucket_index_edge_values():
+    bounds = LATENCY_BUCKETS
+    # a value exactly equal to a bound lands IN that bound's bucket (le
+    # semantics) — the edge the regression in Prometheus parlance is 'le'
+    for i, b in enumerate(bounds):
+        assert bucket_index(bounds, b) == i
+    assert bucket_index(bounds, 0.0) == 0                  # below first
+    assert bucket_index(bounds, bounds[-1] * 2) == len(bounds)   # overflow
+    assert bucket_index(bounds, math.inf) == len(bounds)
+
+
+def test_histogram_counts_min_max():
+    h = Histogram(bounds=(1.0, 10.0, 100.0))
+    for v in (0.5, 1.0, 1.0000001, 99.0, 1e6):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["counts"] == [2, 1, 1, 1]          # [<=1, <=10, <=100, +Inf]
+    assert s["count"] == 5 and sum(s["counts"]) == 5
+    assert s["min"] == 0.5 and s["max"] == 1e6
+    assert s["sum"] == pytest.approx(0.5 + 1.0 + 1.0000001 + 99.0 + 1e6)
+    with pytest.raises(ValueError, match="ascending"):
+        Histogram(bounds=(1.0, 1.0, 2.0))
+
+
+def test_counter_and_gauge_semantics():
+    reg = obs.MetricRegistry()
+    c = reg.counter("x_total")
+    c.inc(); c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match=">= 0"):
+        c.inc(-1)
+    assert reg.counter("x_total") is c          # get-or-create: same object
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("x_total")
+    g = reg.gauge("y")
+    g.set(7); g.add(-2)
+    assert g.value == 5.0
+    # labels are part of identity
+    a = reg.counter("z", {"stage": "a"})
+    b = reg.counter("z", {"stage": "b"})
+    assert a is not b
+    a.inc()
+    assert reg.counter("z", {"stage": "a"}).value == 1.0
+    assert reg.counter("z", {"stage": "b"}).value == 0.0
+
+
+def test_vector_counter_load_balance():
+    reg = obs.MetricRegistry()
+    v = reg.vector("probes", 4)
+    v.inc_at([0, 0, 1, 2, 3])                   # repeats accumulate
+    v.add([1, 0, 0, 0])
+    np.testing.assert_array_equal(v.value, [3, 1, 1, 1])
+    s = v.snapshot()
+    assert s["sum"] == 6 and s["min"] == 1 and s["max"] == 3
+    # KL: uniform -> 0; one-hot -> log(B)
+    assert load_balance_stats([5, 5, 5, 5])["kl_vs_uniform"] == \
+        pytest.approx(0.0)
+    assert load_balance_stats([10, 0, 0, 0])["kl_vs_uniform"] == \
+        pytest.approx(math.log(4))
+    assert load_balance_stats([0, 0])["kl_vs_uniform"] == 0.0
+    with pytest.raises(ValueError, match="shape"):
+        v.add([1, 2])
+
+
+# ----------------------------------------------------------------- merges --
+def _sample_registry(seed):
+    rng = np.random.default_rng(seed)
+    reg = obs.MetricRegistry()
+    reg.counter("req_total").inc(float(rng.integers(0, 100)))
+    reg.gauge("epoch").set(float(rng.integers(0, 10)))
+    h = reg.histogram("lat", bounds=(1.0, 10.0, 100.0))
+    for v in rng.uniform(0, 200, size=rng.integers(1, 20)):
+        h.observe(float(v))
+    reg.vector("load", 8).add(rng.integers(0, 50, 8))
+    return reg.snapshot()
+
+
+def _assert_snap_equal(a, b):
+    assert sorted(a) == sorted(b)
+    for k in a:
+        for field, va in a[k].items():
+            vb = b[k][field]
+            if isinstance(va, float):
+                assert va == pytest.approx(vb), (k, field)
+            else:
+                assert va == vb, (k, field)
+
+
+def test_merge_snapshots_associative_and_identity():
+    s1, s2, s3 = (_sample_registry(i) for i in range(3))
+    left = merge_snapshots(merge_snapshots(s1, s2), s3)
+    right = merge_snapshots(s1, merge_snapshots(s2, s3))
+    _assert_snap_equal(left, right)
+    _assert_snap_equal(merge_snapshots({}, s1), s1)
+    # gauges are last-write-wins: the right argument
+    assert left["epoch"]["value"] == s3["epoch"]["value"]
+    # counters and histogram counts add
+    assert left["req_total"]["value"] == pytest.approx(
+        s1["req_total"]["value"] + s2["req_total"]["value"]
+        + s3["req_total"]["value"])
+    assert left["lat"]["count"] == (s1["lat"]["count"] + s2["lat"]["count"]
+                                    + s3["lat"]["count"])
+
+
+def test_merge_rejects_incompatible():
+    a = Histogram(bounds=(1.0, 2.0)).snapshot()
+    b = Histogram(bounds=(1.0, 3.0)).snapshot()
+    with pytest.raises(ValueError, match="bounds"):
+        merge_snapshots({"h": a}, {"h": b})
+    with pytest.raises(ValueError, match="cannot merge"):
+        merge_snapshots({"m": {"type": "counter", "value": 1.0}},
+                        {"m": {"type": "gauge", "value": 1.0}})
+
+
+# --------------------------------------------------- hypothesis properties --
+def test_bucket_index_property():
+    pytest.importorskip("hypothesis")  # optional dev dep — skip, don't error
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.floats(min_value=0.0, max_value=1e8, allow_nan=False),
+           st.sampled_from([LATENCY_BUCKETS, COUNT_BUCKETS,
+                            (1.0, 2.0, 4.0)]))
+    def prop(v, bounds):
+        i = bucket_index(bounds, v)
+        assert 0 <= i <= len(bounds)
+        if i > 0:
+            assert v > bounds[i - 1]      # strictly above every lower bound
+        if i < len(bounds):
+            assert v <= bounds[i]         # within its own upper bound
+
+    prop()
+
+
+def test_merge_associativity_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 1000), st.integers(0, 1000), st.integers(0, 1000))
+    def prop(a, b, c):
+        s1, s2, s3 = (_sample_registry(s) for s in (a, b, c))
+        _assert_snap_equal(
+            merge_snapshots(merge_snapshots(s1, s2), s3),
+            merge_snapshots(s1, merge_snapshots(s2, s3)))
+
+    prop()
+
+
+# ------------------------------------------------------------- exposition --
+def test_prometheus_text_exposition():
+    reg = obs.MetricRegistry()
+    reg.counter("req_total", {"stage": "gather"}).inc(3)
+    reg.gauge("epoch").set(2)
+    h = reg.histogram("lat", bounds=(1.0, 10.0))
+    h.observe(0.5); h.observe(5.0); h.observe(50.0)
+    reg.vector("load", 4).add([1, 2, 3, 4])
+    text = reg.to_text()
+    assert '# TYPE req_total counter' in text
+    assert 'req_total{stage="gather"} 3' in text
+    assert "epoch 2" in text
+    # histogram buckets are CUMULATIVE and end at +Inf == _count
+    assert 'lat_bucket{le="1"} 1' in text
+    assert 'lat_bucket{le="10"} 2' in text
+    assert 'lat_bucket{le="+Inf"} 3' in text
+    assert "lat_count 3" in text
+    # vectors expose the load summary, not B raw series
+    assert 'load{stat="kl_vs_uniform"}' in text
+    assert text.endswith("\n")
+
+
+def test_snapshot_is_jsonable():
+    snap = _sample_registry(0)
+    assert json.loads(json.dumps(snap)) == snap
+
+
+# ----------------------------------------------------------- span / fence --
+def test_trace_records_on_success_and_exception():
+    reg = obs.MetricRegistry()
+    with obs.trace(reg, "op_seconds", stage="x") as sp:
+        assert sp.fence(41) == 41           # fence returns its argument
+    with pytest.raises(RuntimeError):
+        with obs.trace(reg, "op_seconds", stage="x"):
+            raise RuntimeError("boom")
+    h = reg.histogram("op_seconds", {"stage": "x"})
+    assert h.count == 2                     # the failed span still recorded
+    assert h.snapshot()["sum"] >= 0.0
+
+
+def test_fence_blocks_jax_arrays():
+    jnp = pytest.importorskip("jax.numpy")
+    reg = obs.MetricRegistry()
+    with obs.trace(reg, "op_seconds") as sp:
+        out = sp.fence(jnp.arange(4) * 2)
+    np.testing.assert_array_equal(np.asarray(out), [0, 2, 4, 6])
+
+
+# ---------------------------------------------------------- MetricsLogger --
+def test_metrics_logger_roundtrip(tmp_path):
+    path = tmp_path / "m.jsonl"
+    reg = obs.MetricRegistry()
+    reg.counter("n").inc(2)
+    with obs.MetricsLogger(str(path)) as log:
+        log.log({"loss": np.float32(0.5), "round": 0}, step=0)
+        log.log({"loss": 0.25, "round": 1}, step=1)
+        log.log_snapshot(reg)
+    rows = [json.loads(x) for x in path.read_text().splitlines()]
+    assert len(rows) == 3
+    assert rows[0]["loss"] == pytest.approx(0.5)    # np scalars serialized
+    assert rows[1]["step"] == 1
+    assert rows[2]["snapshot"]["n"]["value"] == 2.0
+
+
+# -------------------------------------------------------------- trajectory --
+def test_trajectory_record_load_check(tmp_path):
+    from benchmarks import trajectory as tj
+    path = str(tmp_path / "TRAJECTORY.jsonl")
+    rows = [("a/lat", 100.0, "recall=0.9"), ("a/qps", 0.0, 123.4)]
+    written = tj.record("a", rows, path=path)
+    assert [w["name"] for w in written] == ["a/lat", "a/qps"]
+    assert all(w["git_rev"] and w["unit"] == "us_per_call" for w in written)
+    # same value again: within 20% -> no failures
+    tj.record("a", [("a/lat", 105.0, "")], path=path)
+    assert tj.check(path) == []
+    # >20% regression vs the median of priors -> flagged + enforce exits 1
+    tj.record("a", [("a/lat", 200.0, "")], path=path)
+    fails = tj.check(path)
+    assert len(fails) == 1 and "a/lat" in fails[0]
+    with pytest.raises(SystemExit):
+        tj.enforce(path)
+    # an IMPROVEMENT is never a failure
+    tj.record("a", [("a/lat", 50.0, "")], path=path)
+    assert tj.check(path) == []
+    # zero-valued (qps-style) and single-recording metrics never gate
+    assert all("a/qps" not in f for f in tj.check(path))
+
+
+def test_trajectory_registry_mirror_and_bad_lines(tmp_path):
+    from benchmarks import trajectory as tj
+    path = str(tmp_path / "t.jsonl")
+    reg = obs.MetricRegistry()
+    tj.record("b", [("b/x", 10.0, None)], path=path, registry=reg)
+    assert reg.gauge("bench_value", {"bench": "b", "name": "b/x"}).value \
+        == 10.0
+    with open(path, "a") as f:
+        f.write("not json at all\n{\"half\": 1\n")
+    assert [r["name"] for r in tj.load(path)] == ["b/x"]
