@@ -36,7 +36,7 @@ from repro.data.synthetic import clustered_ann
 from repro.fit import FitData, FitEngine, FitState, affinity_topk_ann
 from repro.optim.optimizers import make_optimizer
 
-from benchmarks.jaxpr_walk import peak_intermediate_bytes
+from repro.analysis.jaxpr import peak_intermediate_bytes
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 

@@ -37,7 +37,7 @@ def _timed(fn, *args):
 
 def _analyze(fn, *args):
     """flops + hbm bytes of the kernel's own compiled module."""
-    from benchmarks.hlo_analysis import analyze_hlo
+    from repro.analysis.hlo import analyze_hlo
     import jax
     txt = jax.jit(fn).lower(*args).compile().as_text()
     return analyze_hlo(txt)

@@ -1,300 +1,17 @@
-"""HLO-text cost model with WHILE-LOOP TRIP-COUNT correction.
+"""DEPRECATED shim — the HLO cost model moved to ``repro.analysis.hlo``.
 
-Why: ``compiled.cost_analysis()`` counts a while-loop body ONCE, but our
-programs are scan-heavy (layers x microbatches x CE chunks), so raw XLA
-numbers under-count FLOPs 30-200x. This module re-derives the three roofline
-inputs from the compiled HLO text:
-
-  flops             dot/conv: 2 * prod(result) * contraction, x trip counts
-  hbm_bytes         HBM traffic model: every top-level (non-fused) op's
-                    RESULT bytes, x trip counts. Each buffer is billed once
-                    at its producer; fused interiors are free (VMEM).
-  collective_bytes  result bytes of all-gather/all-reduce/reduce-scatter/
-                    all-to-all/collective-permute, x trip counts, per kind.
-
-Trip counts: scan loops compare the induction variable against a literal in
-the loop CONDITION computation; we take the largest integer constant there.
-
-Parsing notes (XLA CPU post-optimization dumps): every instruction is
-``%name = TYPE opcode(operands), attrs``; operand types are NOT inline, so a
-module-wide symbol table (name -> dims) resolves dot contraction sizes.
+The promoted module adds the donation auditor (input_output_alias vs
+donate_argnums), per-kind collective profiling, and the trip-count fixes
+(order-independent while attrs, compare-operand constants, an explicit
+warning instead of a silent 1x undercount on dynamic bounds). This shim
+re-exports the old names for out-of-tree callers.
 """
-from __future__ import annotations
+import warnings
 
-import re
-from dataclasses import dataclass, field
+from repro.analysis.hlo import (  # noqa: F401
+    COLLECTIVES, SKIP_OPS, Computation, Cost, Instr, analyze_hlo, comp_cost,
+    split_computations, trip_count, type_bytes)
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
-                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
-                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
-
-_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
-_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
-_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
-_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
-_CONST_RE = re.compile(r"constant\((\d+)\)")
-_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
-            "after-all", "copy-start", "copy-done", "partition-id",
-            "replica-id", "opt-barrier", "optimization-barrier"}
-
-
-def type_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _split_type_op(rhs: str):
-    """rhs after '=': returns (type_str, opcode, rest). Handles tuple types."""
-    s = rhs.lstrip()
-    if s.startswith("("):
-        depth = 0
-        for i, ch in enumerate(s):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    type_str = s[:i + 1]
-                    rest = s[i + 1:].lstrip()
-                    break
-        else:
-            return s, "", ""
-    else:
-        m = re.match(r"[\w\[\],]+(\{[^}]*\})?\s*", s)
-        if not m:
-            return s, "", ""
-        type_str = m.group(0)
-        rest = s[m.end():]
-    mo = re.match(r"([a-z][\w\-]*)\(", rest)
-    op = mo.group(1) if mo else ""
-    return type_str, op, rest
-
-
-@dataclass
-class Instr:
-    name: str
-    type_str: str
-    op: str
-    rest: str
-    line: str
-
-
-@dataclass
-class Computation:
-    name: str
-    instrs: list = field(default_factory=list)
-    is_entry: bool = False
-    is_fused: bool = False
-
-
-def split_computations(txt: str):
-    comps: dict[str, Computation] = {}
-    symbols: dict[str, str] = {}     # instr name -> type string
-    cur = None
-    for raw in txt.splitlines():
-        line = raw.strip()
-        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
-            mm = re.search(r"%([\w\.\-]+)", line)
-            name = mm.group(1) if mm else f"anon{len(comps)}"
-            cur = Computation(name=name, is_entry=line.startswith("ENTRY"))
-            comps[name] = cur
-            continue
-        if line == "}":
-            cur = None
-            continue
-        if cur is None or "=" not in line:
-            continue
-        nm = _NAME_RE.match(line)
-        if not nm:
-            continue
-        rhs = line[line.index("=") + 1:]
-        type_str, op, rest = _split_type_op(rhs)
-        if not op:
-            continue
-        inst = Instr(nm.group(1), type_str, op, rest, line)
-        cur.instrs.append(inst)
-        symbols[inst.name] = type_str
-    # mark fusion callees
-    for c in comps.values():
-        for inst in c.instrs:
-            if inst.op == "fusion":
-                m = _CALLS_RE.search(inst.line)
-                if m and m.group(1) in comps:
-                    comps[m.group(1)].is_fused = True
-    return comps, symbols
-
-
-def _dims_of(type_str: str):
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return []
-    return [int(d) for d in m.group(2).split(",") if d]
-
-
-def _elems(type_str: str) -> int:
-    n = 1
-    for d in _dims_of(type_str):
-        n *= d
-    return n
-
-
-def _dot_flops(inst: Instr, symbols: dict) -> int:
-    result_elems = _elems(inst.type_str)
-    ops = re.findall(r"%([\w\.\-]+)", inst.rest.split(")", 1)[0])
-    if not ops:
-        return 0
-    lhs_dims = _dims_of(symbols.get(ops[0], ""))
-    mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
-    contraction = 1
-    if mcd:
-        for i in mcd.group(1).split(","):
-            if i and int(i) < len(lhs_dims):
-                contraction *= lhs_dims[int(i)]
-    return 2 * result_elems * contraction
-
-
-def _conv_flops(inst: Instr, symbols: dict) -> int:
-    result_elems = _elems(inst.type_str)
-    ops = re.findall(r"%([\w\.\-]+)", inst.rest.split(")", 1)[0])
-    if len(ops) < 2:
-        return 0
-    k_dims = _dims_of(symbols.get(ops[1], ""))
-    k_elems = 1
-    for d in k_dims[:-1]:
-        k_elems *= d
-    return 2 * result_elems * max(k_elems, 1)
-
-
-def trip_count(comps: dict, cond_name: str) -> int:
-    c = comps.get(cond_name)
-    if c is None:
-        return 1
-    best = 1
-    for inst in c.instrs:
-        for v in _CONST_RE.findall(inst.line):
-            best = max(best, int(v))
-    return best
-
-
-@dataclass
-class Cost:
-    flops: float = 0.0
-    hbm_bytes: float = 0.0
-    coll: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
-    coll_count: float = 0.0
-
-    def add(self, other: "Cost", mult: float = 1.0):
-        self.flops += other.flops * mult
-        self.hbm_bytes += other.hbm_bytes * mult
-        for k in COLLECTIVES:
-            self.coll[k] += other.coll[k] * mult
-        self.coll_count += other.coll_count * mult
-
-    @property
-    def collective_bytes(self):
-        return sum(self.coll.values())
-
-
-def comp_cost(comps, symbols, name, memo) -> Cost:
-    if name in memo:
-        return memo[name]
-    memo[name] = Cost()   # cycle guard
-    c = comps.get(name)
-    if c is None:
-        return memo[name]
-    cost = Cost()
-    for inst in c.instrs:
-        op = inst.op
-        if op in SKIP_OPS:
-            continue
-        if op == "while":
-            w = _WHILE_RE.search(inst.line)
-            if w:
-                t = trip_count(comps, w.group(1))
-                cost.add(comp_cost(comps, symbols, w.group(2), memo), t)
-                cost.hbm_bytes += type_bytes(inst.type_str)  # carry in/out
-            continue
-        if op == "fusion":
-            mm = _CALLS_RE.search(inst.line)
-            if mm:
-                inner = comp_cost(comps, symbols, mm.group(1), memo)
-                cost.flops += inner.flops
-                for k in COLLECTIVES:
-                    cost.coll[k] += inner.coll[k]
-                cost.coll_count += inner.coll_count
-            cost.hbm_bytes += type_bytes(inst.type_str)
-            continue
-        if op in ("call", "async-start", "custom-call"):
-            mm = _TO_APPLY_RE.search(inst.line) or _CALLS_RE.search(inst.line)
-            if mm:
-                cost.add(comp_cost(comps, symbols, mm.group(1), memo), 1.0)
-            cost.hbm_bytes += type_bytes(inst.type_str)
-            continue
-        if op == "conditional":
-            for mm in re.finditer(
-                    r"(?:branch_computations=\{|true_computation=|"
-                    r"false_computation=)%?([\w\.\-]+)", inst.line):
-                cost.add(comp_cost(comps, symbols, mm.group(1), memo), 1.0)
-            continue
-        hit = next((k for k in COLLECTIVES if op.startswith(k)), None)
-        if hit is not None:
-            if op.endswith("-done"):
-                continue
-            b = type_bytes(inst.type_str)
-            cost.coll[hit] += b
-            cost.coll_count += 1
-            cost.hbm_bytes += b
-            continue
-        if op == "dot":
-            cost.flops += _dot_flops(inst, symbols)
-            cost.hbm_bytes += type_bytes(inst.type_str)
-            continue
-        if op.startswith("convolution"):
-            cost.flops += _conv_flops(inst, symbols)
-            cost.hbm_bytes += type_bytes(inst.type_str)
-            continue
-        if op == "dynamic-update-slice":
-            # in-place on TPU: bill only the update slice, not the buffer
-            ops = re.findall(r"%([\w\.\-]+)", inst.rest.split(")", 1)[0])
-            upd = symbols.get(ops[1], "") if len(ops) > 1 else ""
-            cost.hbm_bytes += type_bytes(upd) or type_bytes(inst.type_str)
-            continue
-        if not c.is_fused:
-            # top-level op boundary: bill the produced buffer once
-            cost.hbm_bytes += type_bytes(inst.type_str)
-    memo[name] = cost
-    return cost
-
-
-def analyze_hlo(txt: str) -> dict:
-    comps, symbols = split_computations(txt)
-    entry = next((n for n, c in comps.items() if c.is_entry), None)
-    if entry is None:
-        entry = max(comps, key=lambda n: len(comps[n].instrs))
-    memo: dict = {}
-    cost = comp_cost(comps, symbols, entry, memo)
-    return {
-        "flops": cost.flops,
-        "hbm_bytes": cost.hbm_bytes,
-        "collective_bytes": cost.collective_bytes,
-        "collectives": dict(cost.coll),
-        "collective_count": cost.coll_count,
-        "n_computations": len(comps),
-    }
-
-
-if __name__ == "__main__":
-    import json
-    import sys
-    print(json.dumps(analyze_hlo(open(sys.argv[1]).read()), indent=1))
+warnings.warn(
+    "benchmarks.hlo_analysis is deprecated; import repro.analysis.hlo",
+    DeprecationWarning, stacklevel=2)

@@ -1,64 +1,17 @@
-"""Shared jaxpr-walk helpers behind every "this intermediate never exists"
-proof in the repo (compact-query [Q, L], store fp32 [L, D], fit [R, L, B])
-and the peak-intermediate-bytes benchmark rows. One copy: a JAX
-representation change (the pjit/scan sub-jaxpr layout) gets fixed here,
-not in three drifting clones. Importable from tests and benchmarks alike —
-the tier-1 entrypoint runs from the repo root (like
-``launch/dryrun.py`` ↔ ``benchmarks/hlo_analysis.py``)."""
-import jax
-import numpy as np
+"""DEPRECATED shim — the jaxpr walker moved to ``repro.analysis.jaxpr``.
 
+One copy of the walk lives there now (recursing shard_map/pallas_call
+params, reporting per-contract peak bytes); this module re-exports the old
+names for out-of-tree callers. In-tree proofs are registered contracts
+(``repro.analysis.contracts``) audited by ``python -m repro.launch.audit``.
+"""
+import warnings
 
-def iter_avals(jaxpr):
-    """Every intermediate aval in a jaxpr, recursing into sub-jaxprs
-    (pjit/scan/cond/vmap bodies)."""
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for p in eqn.params.values():
-            yield from _param_avals(p)
+from repro.analysis.jaxpr import (  # noqa: F401
+    iter_avals, iter_eqns, materializes_dims, peak_intermediate_bytes,
+    peak_report, traced_avals, traced_shapes)
 
-
-def _param_avals(p):
-    if hasattr(p, "jaxpr") and hasattr(p, "consts"):      # ClosedJaxpr
-        yield from iter_avals(p.jaxpr)
-    elif hasattr(p, "eqns"):                               # Jaxpr
-        yield from iter_avals(p)
-    elif isinstance(p, (list, tuple)):
-        for q in p:
-            yield from _param_avals(q)
-
-
-def traced_avals(fn, *args):
-    """Trace ``fn(*args)`` and yield every intermediate aval."""
-    yield from iter_avals(jax.make_jaxpr(fn)(*args).jaxpr)
-
-
-def traced_shapes(fn, args, dtype=None):
-    """All intermediate shapes (optionally of one dtype) of fn(*args)."""
-    return [tuple(a.shape) for a in traced_avals(fn, *args)
-            if getattr(a, "shape", None)
-            and (dtype is None or getattr(a, "dtype", None) == dtype)]
-
-
-def materializes_dims(fn, args, *dims):
-    """True iff some intermediate's shape contains ALL the given distinctive
-    dims — the detector behind the [Q, L] / [L, D] / [R, L, B] proofs.
-    Always pair a negative assertion with a positive control, or it is
-    vacuous."""
-    return any(all(d in shape for d in dims)
-               for shape in (getattr(a, "shape", ()) or ()
-                             for a in traced_avals(fn, *args))
-               if isinstance(shape, tuple))
-
-
-def peak_intermediate_bytes(fn, *args) -> int:
-    """Largest single traced intermediate, in bytes."""
-    best = 0
-    for a in traced_avals(fn, *args):
-        shape = getattr(a, "shape", None)
-        dt = getattr(a, "dtype", None)
-        if shape is None or dt is None:
-            continue
-        best = max(best, int(np.prod(shape, dtype=np.int64)) * dt.itemsize)
-    return best
+warnings.warn(
+    "benchmarks.jaxpr_walk is deprecated; import repro.analysis.jaxpr "
+    "(and register invariants as repro.analysis contracts — see "
+    "docs/analysis.md)", DeprecationWarning, stacklevel=2)

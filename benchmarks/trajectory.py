@@ -38,6 +38,11 @@ REGRESSION_FACTOR = 1.2
 #: and never gate
 _LATENCY_UNITS = ("us_per_call", "us", "ms", "s", "seconds")
 
+#: all gated units: latency plus the static-analysis peak-memory rows the
+#: audit CLI records (analysis_peak_bytes{contract=...}, unit "bytes") — a
+#: growing intermediate is a regression exactly like a growing latency
+_GATED_UNITS = _LATENCY_UNITS + ("bytes",)
+
 
 def git_rev() -> str:
     """Short git revision of the working tree ('unknown' outside a repo)."""
@@ -103,15 +108,16 @@ def load(path: str | None = None) -> list:
 
 def check(path: str | None = None,
           factor: float = REGRESSION_FACTOR) -> list:
-    """Regression gate: for every latency-unit metric with >= 2 recordings,
-    compare the NEWEST value against the median of all PRIOR values.
-    Returns a list of human-readable failure strings (empty = pass).
+    """Regression gate: for every gated-unit metric (latency-like or
+    "bytes") with >= 2 recordings, compare the NEWEST value against the
+    median of all PRIOR values. Returns a list of human-readable failure
+    strings (empty = pass).
 
     Median-of-priors (not just the previous run) keeps one historic noisy
     sample from either masking or faking a regression."""
     by_name: dict = {}
     for row in load(path):
-        if row.get("unit") in _LATENCY_UNITS and row["value"] > 0:
+        if row.get("unit") in _GATED_UNITS and row["value"] > 0:
             by_name.setdefault(row["name"], []).append(row["value"])
     failures = []
     for name, vals in sorted(by_name.items()):

@@ -1,0 +1,58 @@
+"""repro.analysis — static contract checking over jaxprs and compiled HLO.
+
+Three analyzers and a contract DSL (docs/analysis.md):
+
+  * :mod:`repro.analysis.jaxpr`     — trace-level walker: which
+    intermediates exist, their peak bytes (recurses shard_map/pallas_call)
+  * :mod:`repro.analysis.hlo`       — compiled-program auditor: trip-count-
+    corrected FLOP/byte cost model, donation (input_output_alias) and
+    per-kind collective-byte verification
+  * :mod:`repro.analysis.recompile` — trace counting per jitted entry /
+    PipelineCache under parameter sweeps (weak-type drift detection)
+  * :mod:`repro.analysis.contracts` — the DSL (forbid_dims,
+    max_intermediate_bytes, require_dtype_free, require_donated,
+    max_trace_count, allowed_collectives), the process-wide
+    :data:`~repro.analysis.contracts.REGISTRY`, and ``audit()``
+
+Contracts are declared beside the entry points they govern; importing those
+modules is what populates the registry — :func:`load_all` imports them all,
+so the audit CLI and tests see the full set.
+"""
+from repro.analysis.contracts import (Contract, ContractRegistry, Fixture,
+                                      REGISTRY, allowed_collectives, audit,
+                                      forbid_dims, max_intermediate_bytes,
+                                      max_trace_count, register,
+                                      require_dims, require_donated,
+                                      require_dtype_free)
+
+__all__ = [
+    "Contract", "ContractRegistry", "Fixture", "REGISTRY",
+    "allowed_collectives", "audit", "forbid_dims", "load_all",
+    "max_intermediate_bytes", "max_trace_count", "register", "require_dims",
+    "require_donated", "require_dtype_free",
+]
+
+#: every module that declares contracts at import time — load_all() imports
+#: them so REGISTRY is complete (keep in sync when adding a declaration site)
+_CONTRACT_MODULES = (
+    "repro.core.query",
+    "repro.core.search_api",
+    "repro.core.distributed",
+    "repro.store.rerank",
+    "repro.fit.engine",
+    "repro.kernels.freq_topc.ops",
+    "repro.kernels.quant_rerank.ops",
+    "repro.kernels.distance_topk.ops",
+    "repro.kernels.irli_topk.ops",
+)
+
+
+def load_all() -> list:
+    """Import every contract-declaring module and return the registered
+    contract ids. Idempotent (imports cache; registration is keyed)."""
+    import importlib
+
+    import repro.core  # noqa: F401  (package cycle order: core before fit)
+    for mod in _CONTRACT_MODULES:
+        importlib.import_module(mod)
+    return REGISTRY.ids()

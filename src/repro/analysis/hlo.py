@@ -1,0 +1,469 @@
+"""HLO auditor: trip-count-corrected cost model + donation and collective
+verification over COMPILED programs.
+
+The cost model (promoted from ``benchmarks/hlo_analysis.py``, which remains
+as a re-exporting shim) re-derives roofline inputs from compiled HLO text,
+because ``compiled.cost_analysis()`` counts a while-loop body ONCE while our
+programs are scan-heavy (layers x microbatches x CE chunks) — raw XLA
+numbers under-count FLOPs 30-200x:
+
+  flops             dot/conv: 2 * prod(result) * contraction, x trip counts
+  hbm_bytes         HBM traffic model: every top-level (non-fused) op's
+                    RESULT bytes, x trip counts. Each buffer is billed once
+                    at its producer; fused interiors are free (VMEM).
+  collective_bytes  result bytes of all-gather/all-reduce/reduce-scatter/
+                    all-to-all/collective-permute, x trip counts, per kind.
+
+Trip counts are read from the loop CONDITION computation: the literal
+constant the induction variable is compared against. When the bound is NOT
+a literal (a traced operand, e.g. ``fori_loop(0, n, ...)`` with a traced
+``n``), the old parser silently assumed 1 trip — now it emits an explicit
+:class:`HloAnalysisWarning` so an undercount can never pass as a
+measurement.
+
+On top of the cost model sit the two audits the static contracts use:
+
+  :func:`audit_donation`      every ``donate_argnums`` site must show up as
+                              an ``input_output_alias`` entry in the
+                              compiled module — a dropped donation silently
+                              doubles peak memory of the fit round.
+  :func:`collective_profile`  per-kind collective bytes of a compiled
+                              (mesh) program, for the ``allowed_collectives``
+                              contract bounds on the ("data","rep") paths.
+
+Parsing notes (XLA CPU post-optimization dumps): every instruction is
+``%name = TYPE opcode(operands), attrs``; operand types are NOT inline, so a
+module-wide symbol table (name -> dims) resolves dot contraction sizes.
+Tuple-typed results (while carries, sort outputs) are billed via
+:func:`type_bytes`, which sums every shape inside the tuple type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import warnings
+from dataclasses import field
+
+import jax
+
+
+class HloAnalysisWarning(UserWarning):
+    """A parse gave up and fell back to a conservative default (e.g. a
+    while loop whose trip count could not be determined counts as 1)."""
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+# condition=/body= parsed separately: XLA emits them in either order
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "copy-start", "copy-done", "partition-id",
+            "replica-id", "opt-barrier", "optimization-barrier"}
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of one HLO type string — sums every shape inside a
+    tuple type, so while carries and multi-output ops bill fully."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_type_op(rhs: str):
+    """rhs after '=': returns (type_str, opcode, rest). Handles tuple types
+    (including nested tuples, via depth counting)."""
+    s = rhs.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = s[:i + 1]
+                    rest = s[i + 1:].lstrip()
+                    break
+        else:
+            return s, "", ""
+    else:
+        m = re.match(r"[\w\[\],]+(\{[^}]*\})?\s*", s)
+        if not m:
+            return s, "", ""
+        type_str = m.group(0)
+        rest = s[m.end():]
+    mo = re.match(r"([a-z][\w\-]*)\(", rest)
+    op = mo.group(1) if mo else ""
+    return type_str, op, rest
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    is_entry: bool = False
+    is_fused: bool = False
+
+
+def split_computations(txt: str):
+    comps: dict[str, Computation] = {}
+    symbols: dict[str, str] = {}     # instr name -> type string
+    cur = None
+    for raw in txt.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            mm = re.search(r"%([\w\.\-]+)", line)
+            name = mm.group(1) if mm else f"anon{len(comps)}"
+            cur = Computation(name=name, is_entry=line.startswith("ENTRY"))
+            comps[name] = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        nm = _NAME_RE.match(line)
+        if not nm:
+            continue
+        rhs = line[line.index("=") + 1:]
+        type_str, op, rest = _split_type_op(rhs)
+        if not op:
+            continue
+        inst = Instr(nm.group(1), type_str, op, rest, line)
+        cur.instrs.append(inst)
+        symbols[inst.name] = type_str
+    # mark fusion callees
+    for c in comps.values():
+        for inst in c.instrs:
+            if inst.op == "fusion":
+                m = _CALLS_RE.search(inst.line)
+                if m and m.group(1) in comps:
+                    comps[m.group(1)].is_fused = True
+    return comps, symbols
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elems(type_str: str) -> int:
+    n = 1
+    for d in _dims_of(type_str):
+        n *= d
+    return n
+
+
+def _operands(inst: Instr):
+    return re.findall(r"%([\w\.\-]+)", inst.rest.split(")", 1)[0])
+
+
+def _dot_flops(inst: Instr, symbols: dict) -> int:
+    result_elems = _elems(inst.type_str)
+    ops = _operands(inst)
+    if not ops:
+        return 0
+    lhs_dims = _dims_of(symbols.get(ops[0], ""))
+    mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    contraction = 1
+    if mcd:
+        for i in mcd.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                contraction *= lhs_dims[int(i)]
+    return 2 * result_elems * contraction
+
+
+def _conv_flops(inst: Instr, symbols: dict) -> int:
+    result_elems = _elems(inst.type_str)
+    ops = _operands(inst)
+    if len(ops) < 2:
+        return 0
+    k_dims = _dims_of(symbols.get(ops[1], ""))
+    k_elems = 1
+    for d in k_dims[:-1]:
+        k_elems *= d
+    return 2 * result_elems * max(k_elems, 1)
+
+
+def trip_count(comps: dict, cond_name: str, *, warn: bool = True) -> int:
+    """Trip count of one while loop, read from its condition computation.
+
+    Preferred source: the literal constant operand of the ROOT ``compare``
+    (the scan induction-variable test). Fallback: the largest integer
+    constant anywhere in the condition — the old heuristic, still right for
+    simple conditions. When NEITHER exists (the bound is a traced operand,
+    e.g. a dynamic ``fori_loop`` limit), return 1 and warn EXPLICITLY:
+    a silent undercount here poisons every downstream FLOP/bytes number.
+    """
+    c = comps.get(cond_name)
+    if c is None:
+        if warn:
+            warnings.warn(
+                f"while condition computation {cond_name!r} not found; "
+                "assuming trip_count=1 (costs may be undercounted)",
+                HloAnalysisWarning, stacklevel=2)
+        return 1
+    consts = {}
+    for inst in c.instrs:
+        if inst.op == "constant":
+            m = _CONST_RE.search(inst.line)
+            if m:
+                consts[inst.name] = int(m.group(1))
+    # the induction-variable compare: take its literal operand if it has one
+    for inst in c.instrs:
+        if inst.op == "compare":
+            vals = [consts[o] for o in _operands(inst) if o in consts]
+            if vals:
+                return max(max(vals), 1)
+    if consts:   # no compare matched a constant; keep the old max heuristic
+        return max(max(consts.values()), 1)
+    if warn:
+        warnings.warn(
+            f"while condition {cond_name!r} has no literal bound (dynamic "
+            "trip count); assuming trip_count=1 — FLOPs/bytes are LOWER "
+            "bounds for this loop", HloAnalysisWarning, stacklevel=2)
+    return 1
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_count: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+        self.coll_count += other.coll_count * mult
+
+    @property
+    def collective_bytes(self):
+        return sum(self.coll.values())
+
+
+def comp_cost(comps, symbols, name, memo, *, warn: bool = True) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()   # cycle guard
+    c = comps.get(name)
+    if c is None:
+        return memo[name]
+    cost = Cost()
+    for inst in c.instrs:
+        op = inst.op
+        if op in SKIP_OPS:
+            continue
+        if op == "while":
+            mc, mb = _COND_RE.search(inst.line), _BODY_RE.search(inst.line)
+            if mb:
+                if mc:
+                    t = trip_count(comps, mc.group(1), warn=warn)
+                else:
+                    t = 1
+                    if warn:
+                        warnings.warn(
+                            f"while instruction without condition= ref: "
+                            f"{inst.line[:120]!r} — billing the body ONCE "
+                            "(costs may be undercounted)",
+                            HloAnalysisWarning, stacklevel=2)
+                cost.add(comp_cost(comps, symbols, mb.group(1), memo,
+                                   warn=warn), t)
+                cost.hbm_bytes += type_bytes(inst.type_str)  # carry in/out
+            elif warn:
+                warnings.warn(
+                    f"while instruction without body= ref: "
+                    f"{inst.line[:120]!r} — skipped (costs undercounted)",
+                    HloAnalysisWarning, stacklevel=2)
+            continue
+        if op == "fusion":
+            mm = _CALLS_RE.search(inst.line)
+            if mm:
+                inner = comp_cost(comps, symbols, mm.group(1), memo,
+                                  warn=warn)
+                cost.flops += inner.flops
+                for k in COLLECTIVES:
+                    cost.coll[k] += inner.coll[k]
+                cost.coll_count += inner.coll_count
+            cost.hbm_bytes += type_bytes(inst.type_str)
+            continue
+        if op in ("call", "async-start", "custom-call"):
+            mm = _TO_APPLY_RE.search(inst.line) or _CALLS_RE.search(inst.line)
+            if mm:
+                cost.add(comp_cost(comps, symbols, mm.group(1), memo,
+                                   warn=warn), 1.0)
+            cost.hbm_bytes += type_bytes(inst.type_str)
+            continue
+        if op == "conditional":
+            for mm in re.finditer(
+                    r"(?:branch_computations=\{|true_computation=|"
+                    r"false_computation=)%?([\w\.\-]+)", inst.line):
+                cost.add(comp_cost(comps, symbols, mm.group(1), memo,
+                                   warn=warn), 1.0)
+            continue
+        hit = next((k for k in COLLECTIVES if op.startswith(k)), None)
+        if hit is not None:
+            if op.endswith("-done"):
+                continue
+            b = type_bytes(inst.type_str)
+            cost.coll[hit] += b
+            cost.coll_count += 1
+            cost.hbm_bytes += b
+            continue
+        if op == "dot":
+            cost.flops += _dot_flops(inst, symbols)
+            cost.hbm_bytes += type_bytes(inst.type_str)
+            continue
+        if op.startswith("convolution"):
+            cost.flops += _conv_flops(inst, symbols)
+            cost.hbm_bytes += type_bytes(inst.type_str)
+            continue
+        if op == "dynamic-update-slice":
+            # in-place on TPU: bill only the update slice, not the buffer
+            ops = _operands(inst)
+            upd = symbols.get(ops[1], "") if len(ops) > 1 else ""
+            cost.hbm_bytes += type_bytes(upd) or type_bytes(inst.type_str)
+            continue
+        if not c.is_fused:
+            # top-level op boundary: bill the produced buffer once
+            cost.hbm_bytes += type_bytes(inst.type_str)
+    memo[name] = cost
+    return cost
+
+
+def analyze_hlo(txt: str, *, warn: bool = True) -> dict:
+    comps, symbols = split_computations(txt)
+    entry = next((n for n, c in comps.items() if c.is_entry), None)
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n].instrs))
+    memo: dict = {}
+    cost = comp_cost(comps, symbols, entry, memo, warn=warn)
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collectives": dict(cost.coll),
+        "collective_count": cost.coll_count,
+        "n_computations": len(comps),
+    }
+
+
+# ----------------------------------------------------------- compile help --
+def compiled_text(fn, args, *, donate_argnums=(), static_argnums=()) -> str:
+    """jit + lower + compile ``fn`` over ``args`` and return the optimized
+    HLO text. Compile only — nothing executes."""
+    jitted = jax.jit(fn, donate_argnums=donate_argnums,
+                     static_argnums=static_argnums)
+    return jitted.lower(*args).compile().as_text()
+
+
+# ------------------------------------------------------------- donation ----
+_ALIAS_ENTRY_RE = re.compile(r"\(\s*(\d+)\s*,\s*\{[^}]*\}\s*(?:,\s*"
+                             r"(?:may|must)-alias)?\s*\)")
+
+
+def aliased_params(hlo_text: str) -> set[int]:
+    """Flat parameter numbers that the compiled module aliases to an output
+    (the compiled form of a honored ``donate_argnums``). The alias block is
+    brace-nested (``{ {0}: (0, {}, may-alias), ... }``) so it is extracted
+    by depth counting, not a regex."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return set()
+    i = hlo_text.index("{", start)
+    depth, j = 0, i
+    for j in range(i, min(len(hlo_text), i + 100_000)):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    return {int(p) for p in _ALIAS_ENTRY_RE.findall(hlo_text[i:j + 1])}
+
+
+@dataclasses.dataclass(frozen=True)
+class DonationReport:
+    """Which flattened params of the donated argnums actually alias."""
+    argnums: tuple
+    expected: tuple      # flat param numbers the donated args occupy
+    aliased: tuple       # the subset the compiled module aliases
+    missing: tuple       # expected - aliased  (empty = donation honored)
+
+    @property
+    def ok(self) -> bool:
+        return not self.missing
+
+    @property
+    def fraction(self) -> float:
+        return 1.0 if not self.expected else (
+            len(self.aliased) / len(self.expected))
+
+
+def audit_donation(fn, args, donate_argnums, *,
+                   static_argnums=()) -> DonationReport:
+    """Compile ``jit(fn, donate_argnums=...)`` and verify every flattened
+    leaf of the donated args appears in the module's input_output_alias —
+    the check that catches a donation dropped by a refactor (the FitState
+    double-buffer guarantee) before it doubles peak memory at scale."""
+    donate_argnums = tuple(donate_argnums)
+    static_argnums = tuple(static_argnums)
+    txt = compiled_text(fn, args, donate_argnums=donate_argnums,
+                        static_argnums=static_argnums)
+    # flat param numbering skips static args (they are baked into the trace)
+    expected, offset = [], 0
+    for i, a in enumerate(args):
+        if i in static_argnums:
+            continue
+        n = len(jax.tree.leaves(a))
+        if i in donate_argnums:
+            expected.extend(range(offset, offset + n))
+        offset += n
+    aliased = aliased_params(txt)
+    expected_t = tuple(expected)
+    hit = tuple(p for p in expected_t if p in aliased)
+    return DonationReport(argnums=donate_argnums, expected=expected_t,
+                          aliased=hit,
+                          missing=tuple(p for p in expected_t
+                                        if p not in aliased))
+
+
+# ----------------------------------------------------------- collectives ---
+def collective_profile(fn, args, *, warn: bool = True) -> dict:
+    """Compile ``fn(*args)`` and return the cost model's per-kind collective
+    byte/count profile — what the ``allowed_collectives`` contract bounds on
+    the ("data","rep") mesh paths."""
+    rec = analyze_hlo(compiled_text(fn, args), warn=warn)
+    return {"collectives": rec["collectives"],
+            "collective_bytes": rec["collective_bytes"],
+            "collective_count": rec["collective_count"]}

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchDef, CellDef, dp, grid_axes, sds
+from repro.configs.base import ArchDef, dp, grid_axes, sds
 from repro.configs import recsys_common as RC
 from repro.models.module import ShardRules
 from repro.models.recsys import DIENConfig, dien_init, dien_apply

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchDef, CellDef, dp, grid_axes, sds
+from repro.configs.base import ArchDef, dp, grid_axes, sds
 from repro.configs import recsys_common as RC
 from repro.models.module import ShardRules
 from repro.models.recsys import DLRMConfig, dlrm_init, dlrm_apply

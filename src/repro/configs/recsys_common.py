@@ -15,11 +15,9 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import CellDef, dp, grid_axes, sds
+from repro.configs.base import CellDef, sds
 from repro.launch import steps as S
 
 BATCHES = {"train_batch": 65536, "serve_p99": 512, "serve_bulk": 262144}

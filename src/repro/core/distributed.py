@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import search_api as SA
 from repro.core.search_api import SearchParams, SearchResult
@@ -335,3 +335,54 @@ def make_production_search(mesh: Mesh, params: SearchParams | None = None, *,
                             mode="compact")
 
     return search
+
+
+# ------------------------------------------------------- static contracts --
+# The collective schedule documented above ("one all_gather of k floats +
+# ids and one [Q] psum per query — nothing else crosses shards") as a
+# registered, byte-bounded invariant, plus the per-shard no-[Q, L] proof.
+from repro.analysis import contracts as _C
+
+
+def _local_compact_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.local_search_compact("compact")
+
+
+def _local_dense_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.local_search_compact("dense")
+
+
+def _production_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.production_search()
+
+
+_C.register(_C.Contract(
+    id="distributed.local_search_compact_no_dense_table",
+    site="repro.core.distributed.local_search",
+    description="the per-shard serving path in compact mode never builds a "
+                "[Q, L_loc] table (dense mode is the control)",
+    fixture=_local_compact_fixture,
+    checks=[_C.forbid_dims("Q", "L"), _C.require_dims("Q", "C")],
+    control=_local_dense_control,
+))
+
+_C.register(_C.Contract(
+    id="distributed.production_merge_collectives",
+    site="repro.core.distributed.make_production_search",
+    description="the sharded merge moves ONLY the tiny per-shard winners: "
+                "one all-gather of [Q, P, k] scores (f32) + ids (s32) and "
+                "one [Q] psum of survivor counts — byte-exact bound, no "
+                "other collective kind",
+    fixture=_production_fixture,
+    checks=[_C.allowed_collectives({
+        # scores f32 + ids s32, each [Q, P, k] per device
+        "all-gather": lambda fx: 2 * fx.dims["Q"] * fx.dims["P"]
+        * fx.dims["k"] * 4,
+        # the [Q] s32 psum of n_candidates (headroom for an int64 lowering)
+        "all-reduce": lambda fx: 8 * fx.dims["Q"],
+    })],
+    min_devices=2,
+))

@@ -535,3 +535,48 @@ def precision_at(scores_mask, freq, queries, label_vecs, gt_labels, ks=(1, 3, 5)
         hit = (top[..., None] == gt_labels[:, None, :]).any(-1)
         out[f"P@{k}"] = jnp.mean(hit.astype(jnp.float32))
     return out
+
+
+# ------------------------------------------------------- static contracts --
+# The compact path's scalability claim, as registered invariants: proven by
+# `python -m repro.launch.audit` (and tests/test_query_pipeline.py asserts
+# the same contract ids). Declared here, beside the entry point; the toy
+# fixtures live in repro.analysis.fixtures and build lazily at audit time.
+from repro.analysis import contracts as _C  # noqa: E402
+
+
+def _compact_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.query_search("compact")
+
+
+def _compact_streaming_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.query_search("compact", streaming=True)
+
+
+def _dense_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.query_search("dense")
+
+
+_C.register(_C.Contract(
+    id="query.compact_no_dense_table",
+    site="repro.core.query.QueryPipeline.search",
+    description="compact mode never materializes the [Q, L] count table "
+                "(the 100M-scale serving guarantee); dense mode is the "
+                "control that MUST build it",
+    fixture=_compact_fixture,
+    checks=[_C.forbid_dims("Q", "L"), _C.require_dims("Q", "C")],
+    control=_dense_control,
+))
+
+_C.register(_C.Contract(
+    id="query.compact_streaming_no_dense_table",
+    site="repro.core.query.QueryPipeline.search (delta + tombstone)",
+    description="the streaming path (delta segments unioned, tombstones "
+                "dropped) keeps the same no-[Q, L] guarantee",
+    fixture=_compact_streaming_fixture,
+    checks=[_C.forbid_dims("Q", "L"), _C.require_dims("Q", "C")],
+    control=_dense_control,
+))

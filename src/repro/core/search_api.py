@@ -334,3 +334,27 @@ def params_from_legacy_kwargs(surface: str, *, stacklevel: int = 3,
         f" k={filled['k']}, ...) instead (see docs/search_api.md)",
         DeprecationWarning, stacklevel=stacklevel)
     return SearchParams(**filled)
+
+
+# ------------------------------------------------------- static contracts --
+# Per-request tunability must not mean per-request recompilation: the cache
+# compiles exactly once per (resolved params, corpus, batch bucket) key —
+# audited over a sweep that repeats every key (repro.launch.audit; the same
+# contract id is asserted by tests/test_analysis.py).
+from repro.analysis import contracts as _C
+
+
+def _cache_sweep_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.pipeline_cache_sweep()
+
+
+_C.register(_C.Contract(
+    id="search.cache_compiles_once",
+    site="repro.core.search_api.PipelineCache",
+    description="a SearchParams sweep with 4 distinct resolved keys, each "
+                "hit twice, traces exactly 4 pipelines — extra traces mean "
+                "cache-key drift (weak types, unstable hashing)",
+    fixture=_cache_sweep_fixture,
+    checks=[_C.max_trace_count(4)],
+))

@@ -10,10 +10,9 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -363,3 +363,86 @@ class FitEngine:
                              batch["w"])
             return ns.as_dict(), m
         return step
+
+
+# ------------------------------------------------------- static contracts --
+# The engine's three compiled-program guarantees as registered invariants
+# (audited by repro.launch.audit; tests/test_fit_engine.py and
+# tests/test_analysis.py assert the same ids):
+#   no [R, L, B] dense affinity, FitState donation honored end to end,
+#   exactly one trace per round structure, and a bounded mesh collective
+#   schedule on the ("data", "rep") path.
+from repro.analysis import contracts as _C
+
+
+def _fit_round_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.fit_round()
+
+
+def _fit_dense_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.fit_round_dense_control()
+
+
+def _fit_sweep_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.fit_round_sweep()
+
+
+def _sharded_round_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.sharded_fit_round()
+
+
+_C.register(_C.Contract(
+    id="fit.round_no_dense_affinity",
+    site="repro.fit.engine.FitEngine.make_fit_round",
+    description="the whole compiled train+affinity+re-partition round "
+                "never materializes [.., L, B] (the 100M-label guarantee); "
+                "the streamed [R, chunk, B] block and the running [R, L, K] "
+                "carry must BOTH be sighted (non-vacuity); the seed-style "
+                "dense path is the control",
+    fixture=_fit_round_fixture,
+    checks=[
+        _C.forbid_dims("L", "B"),
+        _C.require_dims("chunk", "B"),
+        _C.require_dims("L", "K"),
+    ],
+    control=_fit_dense_control,
+))
+
+_C.register(_C.Contract(
+    id="fit.round_donates_state",
+    site="repro.fit.engine.FitEngine.make_fit_round (donate_argnums=(0,))",
+    description="every flattened FitState leaf is aliased input->output in "
+                "the compiled round (double-buffer-free training); the "
+                "control re-jits without donation and must alias nothing",
+    fixture=_fit_round_fixture,
+    checks=[_C.require_donated()],
+))
+
+_C.register(_C.Contract(
+    id="fit.round_compiles_once",
+    site="repro.fit.engine.FitEngine.make_fit_round",
+    description="two rounds over fresh same-structure states trace exactly "
+                "once — a retrace means the state pytree or batch "
+                "structure drifted between rounds",
+    fixture=_fit_sweep_fixture,
+    checks=[_C.max_trace_count(1)],
+))
+
+_C.register(_C.Contract(
+    id="fit.sharded_round_collectives",
+    site="repro.fit.engine.FitEngine.make_sharded_fit_round",
+    description="the (data x rep) mesh round speaks only all-reduce (grad "
+                "psums, scalar diagnostics) and all-gather (split-affinity "
+                "reassembly) within a generous byte ceiling — no "
+                "all-to-all / reduce-scatter / collective-permute may "
+                "appear on the fit path",
+    fixture=_sharded_round_fixture,
+    checks=[_C.allowed_collectives({
+        "all-reduce": 1 << 24, "all-gather": 1 << 24,
+    })],
+    min_devices=4,
+))

@@ -32,7 +32,6 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import VMEM
 
 _SENT = jnp.iinfo(jnp.int32).max   # pads sort last
 

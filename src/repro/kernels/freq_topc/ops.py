@@ -12,3 +12,28 @@ def frequent_topc(cands, *, C: int, tq: int = 8):
     if jax.default_backend() == "tpu" and cands.shape[1] <= MAX_WIDTH:
         return freq_topc(cands, C=C, tq=tq)
     return freq_topc_ref(cands, C=C)
+
+
+# ------------------------------------------------------- static contracts --
+from repro.analysis import contracts as _C
+
+
+def _freq_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.freq_topc_fixture()
+
+
+def _freq_dense_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.freq_topc_fixture(dense=True)
+
+
+_C.register(_C.Contract(
+    id="kernels.freq_topc.no_dense_histogram",
+    site="repro.kernels.freq_topc.ops.frequent_topc",
+    description="FrequentOnes top-C counts candidates by sort + run-length, "
+                "never via a [Q, L] histogram (the control builds one)",
+    fixture=_freq_fixture,
+    checks=[_C.forbid_dims("Q", "L"), _C.require_dims("Q", "C")],
+    control=_freq_dense_control,
+))

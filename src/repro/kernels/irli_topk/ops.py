@@ -10,3 +10,32 @@ def scorer_topk(h, w2, b2, *, m: int, tq: int = 128, tb: int = 512):
     if jax.default_backend() == "tpu":
         return irli_topk(h, w2, b2, m=m, tq=tq, tb=tb)
     return irli_topk_ref(h, w2, b2, m=m)
+
+
+# ------------------------------------------------------- static contracts --
+from repro.analysis import contracts as _C
+
+
+def _irli_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.irli_topk_fixture()
+
+
+def _irli_naive_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.irli_topk_fixture(naive=True)
+
+
+_C.register(_C.Contract(
+    id="kernels.irli_topk.no_onehot_select",
+    site="repro.kernels.irli_topk.ops.scorer_topk",
+    description="fused scoring + top-m selects with lax.top_k over the "
+                "[Q, B] logits — never a [Q, m, B] one-hot stack (the "
+                "naive control builds one)",
+    fixture=_irli_fixture,
+    checks=[
+        _C.forbid_dims("Q", "B", "m"),
+        _C.require_dims("Q", "B"),
+    ],
+    control=_irli_naive_control,
+))

@@ -60,3 +60,32 @@ def quant_coarse_topk(queries, codes, scales, cand_ids, cand_counts, *,
                             tau=tau, k=k, metric=metric, tq=tq)
     return _coarse_chunked(queries, codes, scales, cand_ids, cand_counts,
                            tau=tau, k=k, metric=metric, chunk=chunk)
+
+
+# ------------------------------------------------------- static contracts --
+from repro.analysis import contracts as _C
+
+
+def _quant_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.quant_rerank_fixture()
+
+
+def _quant_fullwidth_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.quant_rerank_fixture(chunk=80)   # chunk = C: full-width dequant
+
+
+_C.register(_C.Contract(
+    id="kernels.quant_rerank.coarse_dequant_bounded",
+    site="repro.kernels.quant_rerank.ops.quant_coarse_topk",
+    description="the coarse stage's fp32 dequant working set is [Q, chunk, "
+                "D], never the full [Q, C, D] candidate width (the control "
+                "runs with chunk=C and must materialize it)",
+    fixture=_quant_fixture,
+    checks=[
+        _C.forbid_dims("Q", "C", "D", dtype="float32"),
+        _C.require_dims("Q", "chunk", "D", dtype="float32"),
+    ],
+    control=_quant_fullwidth_control,
+))

@@ -21,7 +21,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ARCHS, get_arch
@@ -139,14 +138,11 @@ def analyze(lowered, want_hlo: bool = True):
             txt = lowered.as_text()
         rec["collectives"] = collective_bytes(txt)
         rec["hlo_lines"] = txt.count("\n")
-        # trip-count-corrected roofline inputs (see benchmarks/hlo_analysis):
+        # trip-count-corrected roofline inputs (see repro.analysis.hlo):
         # raw cost_analysis counts while bodies ONCE; scan-heavy programs
         # under-count 30-200x without this.
         try:
-            import sys
-            sys.path.insert(0, os.path.join(os.path.dirname(__file__),
-                                            "..", "..", ".."))
-            from benchmarks.hlo_analysis import analyze_hlo
+            from repro.analysis.hlo import analyze_hlo
             rec["corrected"] = analyze_hlo(txt)
         except Exception as e:  # parser must never fail the dry-run
             rec["corrected"] = {"error": f"{type(e).__name__}: {e}"}

@@ -11,14 +11,13 @@ mirror param sharding plus the data axis on the first divisible dim.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import zero_state_spec
-from repro.models.module import map_with_paths
 from repro.optim.optimizers import make_optimizer
 
 

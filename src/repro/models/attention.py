@@ -13,7 +13,6 @@ chunked-local (Llama-4), causal full. Two execution modes:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

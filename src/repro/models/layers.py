@@ -7,7 +7,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
 import jax

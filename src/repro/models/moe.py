@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import layers as L
-from repro.models.module import constrain, constrain_first
+from repro.models.module import constrain_first
 
 
 @dataclasses.dataclass(frozen=True)

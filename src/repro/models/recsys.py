@@ -13,7 +13,6 @@ two-tower dot (the IRLI-accelerated path lives in core/index.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ as 4x (int8) / k-fraction smaller all-reduce operand bytes on the pod axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ the launcher's state_specs()).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -83,3 +83,36 @@ def refine_stage(queries, store: QuantizedStore, cids, *, k: int,
         scores = jnp.pad(scores, ((0, 0), (0, pad)),
                          constant_values=-jnp.inf)
     return ids, scores
+
+
+# ------------------------------------------------------- static contracts --
+# The memory contract in this module's docstring, as a registered invariant
+# (audited by repro.launch.audit; tests/test_store.py asserts the same id).
+from repro.analysis import contracts as _C
+
+
+def _int8_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.store_search("int8")
+
+
+def _fp32_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.store_search("fp32")
+
+
+_C.register(_C.Contract(
+    id="store.int8_no_fp32_payload",
+    site="repro.store.rerank.rerank_two_stage",
+    description="with store_dtype='int8' the traced search holds no fp32 "
+                "[L, D] (full decode) and no fp32 [Q, C, D] (full-width "
+                "gather); fp32 appears only at the [Q, k', D] refine. The "
+                "fp32 store is the control that DOES gather full width",
+    fixture=_int8_fixture,
+    checks=[
+        _C.require_dtype_free("float32", "L", "D"),
+        _C.forbid_dims("Q", "C", "D", dtype="float32"),
+        _C.require_dims("Q", "kp", "D", dtype="float32"),
+    ],
+    control=_fp32_control,
+))

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np

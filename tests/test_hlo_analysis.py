@@ -1,11 +1,18 @@
-"""The trip-count-corrected HLO cost model vs hand-computable programs."""
+"""The trip-count-corrected HLO cost model vs hand-computable programs,
+plus regression coverage for the promoted ``repro.analysis.hlo`` module:
+order-independent while attrs, tuple-typed results, dynamic-bound warning
+(instead of a silent 1x undercount), donation-alias parsing, and the
+``benchmarks.hlo_analysis`` deprecation shim."""
+import re
+import warnings
+
 import jax
 import jax.numpy as jnp
-import numpy as np
+import pytest
 
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-from benchmarks.hlo_analysis import analyze_hlo
+from repro.analysis.hlo import (HloAnalysisWarning, aliased_params,
+                                analyze_hlo, audit_donation, compiled_text,
+                                split_computations, trip_count, type_bytes)
 
 
 def _hlo(fn, *args):
@@ -66,3 +73,112 @@ def test_hbm_bytes_scale_with_scan():
     rec = analyze_hlo(_hlo(f, x))
     # each iteration touches >= one 4MB buffer; x8 trips
     assert rec["hbm_bytes"] >= 8 * 1024 * 1024 * 4, rec["hbm_bytes"]
+
+
+# --------------------------------------------- regression: while parsing ----
+def _while_hlo():
+    a = jnp.zeros((64, 64))
+
+    def f(a):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, a, None, length=10)
+        return out
+
+    return _hlo(f, a)
+
+
+def test_while_attrs_order_independent():
+    """``body=..., condition=...`` (swapped attr order) must analyze
+    identically — the old single regex required condition-first and
+    silently dropped the trip count otherwise."""
+    txt = _while_hlo()
+    want = analyze_hlo(txt)
+
+    def swap(m):
+        return f"{m.group(2)}, {m.group(1)}"
+
+    swapped, n = re.subn(r"(condition=%?[\w\.\-]+)\s*,\s*(body=%?[\w\.\-]+)",
+                         swap, txt)
+    assert n >= 1, "fixture HLO contains no condition=..., body=... attrs"
+    assert swapped != txt
+    got = analyze_hlo(swapped)
+    assert got["flops"] == want["flops"]
+    assert got["hbm_bytes"] == want["hbm_bytes"]
+
+
+def test_missing_condition_warns_and_counts_once():
+    """A while whose condition computation can't be resolved must warn and
+    bill the body once — never crash, never silently drop the body."""
+    txt = _while_hlo()
+    base = analyze_hlo(txt)
+    broken = re.sub(r"condition=%?[\w\.\-]+\s*,\s*", "", txt)
+    assert broken != txt
+    with pytest.warns(HloAnalysisWarning):
+        rec = analyze_hlo(broken)
+    assert rec["flops"] > 0
+    assert rec["flops"] <= base["flops"]
+
+
+def test_dynamic_trip_count_warns():
+    """A data-dependent loop bound (traced fori upper limit) has no static
+    trip count: the analyzer must emit HloAnalysisWarning and fall back to
+    1x — the old model silently picked an arbitrary constant."""
+    x = jnp.zeros((16,))
+
+    def f(x, n):
+        return jax.lax.fori_loop(0, n, lambda i, c: c * 2.0, x)
+
+    txt = _hlo(f, x, jnp.int32(5))
+    with pytest.warns(HloAnalysisWarning):
+        rec = analyze_hlo(txt)
+    assert rec["flops"] >= 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        analyze_hlo(txt, warn=False)     # opt-out must stay silent
+
+
+def test_trip_count_missing_computation():
+    comps, _ = split_computations(_while_hlo())
+    with pytest.warns(HloAnalysisWarning):
+        assert trip_count(comps, "no_such_computation") == 1
+
+
+def test_tuple_type_bytes():
+    """While results are tuple-typed; every element must be billed."""
+    assert type_bytes("(f32[64,64]{1,0}, s32[])") == 64 * 64 * 4 + 4
+    assert type_bytes("(f32[8]{0}, (s32[4]{0}, pred[]))") == 8 * 4 + 4 * 4 + 1
+    assert type_bytes("f32[2,3]{1,0}") == 24
+
+
+# ------------------------------------------------- regression: donation -----
+def test_aliased_params_nested_braces():
+    """The alias header nests braces — ``(0, {}, may-alias)`` inside the
+    outer ``{...}`` — which broke the old non-greedy block regex."""
+    hdr = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+           "{1}: (2, {}, must-alias) }, entry_computation_layout={()->()}")
+    assert aliased_params(hdr) == {0, 2}
+    assert aliased_params("HloModule m") == set()
+
+
+def test_audit_donation_roundtrip():
+    x = jnp.ones((32,), jnp.float32)
+    y = jnp.ones((32,), jnp.float32)
+
+    def fn(a, b):
+        return a + b, a - b
+
+    rep = audit_donation(fn, (x, y), donate_argnums=(0, 1))
+    assert rep.ok, rep
+    assert rep.missing == ()
+    # without donation nothing may alias (the auto-control the contracts use)
+    assert aliased_params(compiled_text(fn, (x, y))) == set()
+
+
+# ------------------------------------------------------- deprecation shim ---
+def test_benchmarks_shim_warns_and_reexports():
+    import importlib
+    import benchmarks.hlo_analysis as shim
+    with pytest.warns(DeprecationWarning, match="repro.analysis.hlo"):
+        importlib.reload(shim)
+    assert shim.analyze_hlo is analyze_hlo
