@@ -1,0 +1,208 @@
+"""Online refit under query drift — the ISSUE's acceptance benchmark.
+
+Setup: a clustered corpus whose query distribution DRIFTS. The index is
+fitted on phase-A traffic (queries around one half of the clusters), then
+served phase-B traffic (the other half). Three curves of recall@10 on
+held-out phase-B queries, all at the same tight serve budget:
+
+  - **stale frozen**: the phase-A index, never refit — the floor;
+  - **offline refit**: a from-scratch fit on a phase-B train set with
+    exact labels — the ceiling;
+  - **online refit**: the OnlineRefitLoop consuming sampled live traffic
+    through an obs.QueryLog. Each background round drains one traffic
+    window — phase-B queries self-labelled by an exploration-budget
+    search (full probe sweep, the expensive teacher the serving stack can
+    itself produce) — runs an incremental fit round against the live
+    corpus, and swaps the sealed artifact in with zero downtime.
+
+Acceptance (asserted here, recorded in artifacts/BENCH_online.json +
+TRAJECTORY.jsonl): within 5 background rounds the online curve recovers
+>= 90% of the stale->offline recall gap, and p99 serve latency for
+requests overlapping a swap stays within 1.5x steady-state p99 (with a
+small absolute floor absorbing single-core contention at toy scale).
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core.index import IRLIConfig, IRLIIndex
+from repro.core.search_api import SearchParams
+from repro.data.synthetic import _topk_l2
+from repro.obs import QueryLog
+from repro.online import OnlineRefitLoop, RefitConfig
+from repro.stream import MutableIRLIIndex
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+D, B, R = 16, 32, 2
+N_CLUSTERS = 40
+SERVE = SearchParams(m=4, tau=1, k=10, mode="compact", topC=1024)
+TEACHER = SearchParams(m=B, tau=1, k=10, mode="compact", topC=1024)
+ROUNDS = 5                       # the ISSUE's "within 5 background rounds"
+TRAFFIC_PER_ROUND = 600
+
+
+def _drifting_corpus(n_base=6000, n_eval=300, n_train=1500, seed=0):
+    """Clustered base + two query phases anchored on disjoint cluster
+    halves. Returns (base, qA_train/gtA, qB_train/gtB, qB_eval/gtB_eval)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(N_CLUSTERS, D)).astype(np.float32) * 3.0
+    cid = rng.integers(0, N_CLUSTERS, n_base)
+    base = centers[cid] + rng.normal(size=(n_base, D)).astype(np.float32) * 0.7
+    base /= np.linalg.norm(base, axis=1, keepdims=True) + 1e-9
+
+    def queries(n, clusters):
+        anchor = np.flatnonzero(np.isin(cid, clusters))
+        idx = rng.choice(anchor, n)
+        q = base[idx] + rng.normal(size=(n, D)).astype(np.float32) * 0.05
+        q /= np.linalg.norm(q, axis=1, keepdims=True) + 1e-9
+        return q.astype(np.float32)
+
+    half = np.arange(N_CLUSTERS // 2)
+    qa = queries(n_train, half)
+    qb_train = queries(n_train, half + N_CLUSTERS // 2)
+    qb_eval = queries(n_eval, half + N_CLUSTERS // 2)
+    return (base, qa, _topk_l2(base, qa, 10, "angular"),
+            qb_train, _topk_l2(base, qb_train, 10, "angular"),
+            qb_eval, _topk_l2(base, qb_eval, 10, "angular"))
+
+
+def _cfg(n_labels, seed):
+    return IRLIConfig(d=D, n_labels=n_labels, n_buckets=B, n_reps=R,
+                      d_hidden=64, K=4, rounds=3, epochs_per_round=3,
+                      batch_size=512, lr=2e-3, seed=seed)
+
+
+def _recall(ids, gt) -> float:
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    return float(np.mean([len(set(gt[i]) & set(ids[i])) / gt.shape[1]
+                          for i in range(len(gt))]))
+
+
+def _swap_pause(midx, queries, arts):
+    """p99 serve latency for requests overlapping an install vs steady.
+
+    A hammer thread timestamps every request; the main thread records each
+    install's [start, end] wall window; requests whose span intersects a
+    window count as "during swap"."""
+    samples, windows = [], []
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            # materialize: end-to-end latency, and a bounded device queue
+            # (async dispatch alone would let the queue grow without limit
+            # and starve the installer's host syncs)
+            np.asarray(midx.search(queries, SERVE).ids)
+            samples.append((t0, time.perf_counter()))
+
+    np.asarray(midx.search(queries, SERVE).ids)      # warm the jit cache
+    th = threading.Thread(target=hammer, daemon=True)
+    th.start()
+    time.sleep(1.0)                          # steady phase
+    for i in range(6):                       # swap phase
+        art = arts[i % len(arts)]
+        t0 = time.perf_counter()
+        midx.install_artifact(art.with_version(midx.epoch + 1))
+        windows.append((t0, time.perf_counter()))
+        time.sleep(0.25)
+    time.sleep(0.3)
+    stop.set()
+    th.join(timeout=30)
+
+    def overlaps(s):
+        return any(s[0] < w1 and s[1] > w0 for w0, w1 in windows)
+
+    lat = np.array([[e - s, overlaps((s, e))] for s, e in samples])
+    steady = lat[lat[:, 1] == 0, 0]
+    during = lat[lat[:, 1] == 1, 0]
+    p99_steady = float(np.quantile(steady, 0.99))
+    p99_swap = (float(np.quantile(during, 0.99)) if during.size
+                else p99_steady)
+    return p99_steady, p99_swap, int(during.size)
+
+
+def run(csv=True):
+    (base, qa, gta, qb_train, gtb_train,
+     qb_eval, gtb_eval) = _drifting_corpus()
+    n = base.shape[0]
+
+    # phase-A index — then the world drifts to phase B
+    idx = IRLIIndex(_cfg(n, seed=1))
+    idx.fit(qa, gta, label_vecs=base)
+    rec_stale = _recall(idx.search(qb_eval, base, SERVE).ids, gtb_eval)
+
+    # ceiling: full offline refit on phase-B train traffic + exact labels
+    off = IRLIIndex(_cfg(n, seed=2))
+    t0 = time.perf_counter()
+    off.fit(qb_train, gtb_train, label_vecs=base)
+    t_offline = time.perf_counter() - t0
+    rec_offline = _recall(off.search(qb_eval, base, SERVE).ids, gtb_eval)
+
+    # online: serve phase-B traffic, refit from the query log in background
+    reg = obs.MetricRegistry()
+    midx = MutableIRLIIndex(idx, base, registry=reg)
+    qlog = QueryLog(capacity=4 * TRAFFIC_PER_ROUND, registry=reg)
+    loop = OnlineRefitLoop(midx, qlog, config=RefitConfig(
+        min_queries=TRAFFIC_PER_ROUND // 2, rounds_per_cycle=1,
+        epochs_per_round=3, seed=7), registry=reg)
+    rng = np.random.default_rng(3)
+    curve, arts, t_online = [], [], 0.0
+    for _ in range(ROUNDS):
+        traffic = qb_train[rng.integers(0, qb_train.shape[0],
+                                        TRAFFIC_PER_ROUND)]
+        served = midx.search(traffic, TEACHER)   # exploration-budget pass
+        qlog.record(traffic, np.asarray(served.ids))
+        t0 = time.perf_counter()
+        art = loop.run_cycle()
+        t_online += time.perf_counter() - t0
+        assert art is not None
+        arts.append(art)
+        curve.append(_recall(midx.search(qb_eval, SERVE).ids, gtb_eval))
+    rec_online = max(curve)
+    gap = rec_offline - rec_stale
+    recovery = (curve[-1] - rec_stale) / gap if gap > 1e-9 else 1.0
+
+    # swap-pause latency on the final state (two distinct artifacts so
+    # every install really changes the snapshot)
+    p99_steady, p99_swap, n_during = _swap_pause(midx, qb_eval[:16], arts[-2:])
+
+    rows = [("online/recall_stale_frozen", 0.0, rec_stale),
+            ("online/recall_offline_refit", t_offline * 1e6, rec_offline)]
+    rows += [(f"online/recall_online@round={r + 1}", 0.0, v)
+             for r, v in enumerate(curve)]
+    rows += [("online/refit_total", t_online * 1e6, rec_online),
+            ("online/gap_recovery", 0.0, recovery),
+            ("online/swap_p99_steady_s", p99_steady * 1e6, p99_steady),
+            ("online/swap_p99_during_s", p99_swap * 1e6, p99_swap)]
+
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived:.3f}")
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "BENCH_online.json"), "w") as f:
+        json.dump({"rows": [{"name": k, "us": u, "derived": d}
+                            for k, u, d in rows],
+                   "recall_curve": curve, "gap_recovery": recovery,
+                   "n_requests_during_swap": n_during,
+                   "epoch_final": int(midx.epoch)}, f, indent=1)
+    from benchmarks import trajectory
+    trajectory.record("online", rows)
+
+    # ---- the ISSUE's acceptance gates ----
+    assert recovery >= 0.9, (
+        f"online refit recovered only {recovery:.1%} of the "
+        f"{rec_stale:.3f}->{rec_offline:.3f} recall gap in {ROUNDS} rounds")
+    # same guard shape as tests/test_online.py: relative bound with a small
+    # absolute floor for single-core compute contention at toy scale
+    assert p99_swap <= max(1.5 * p99_steady, 0.025), (p99_swap, p99_steady)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -26,6 +26,8 @@ BENCHES = [
     ("distributed", "benchmarks.bench_distributed", "paper Figs 5-6"),
     ("streaming", "benchmarks.bench_streaming",
      "mutable index: insert/delete/compact throughput + recall"),
+    ("online", "benchmarks.bench_online",
+     "online refit under drift: recall-gap recovery + swap-pause p99"),
     ("kernel_roofline", "benchmarks.bench_kernel_roofline",
      "freq_topc + quant_rerank achieved-vs-peak bandwidth"),
 ]

@@ -40,6 +40,7 @@ _CONTRACT_MODULES = (
     "repro.core.distributed",
     "repro.store.rerank",
     "repro.fit.engine",
+    "repro.online.refit",
     "repro.kernels.freq_topc.ops",
     "repro.kernels.quant_rerank.ops",
     "repro.kernels.distance_topk.ops",

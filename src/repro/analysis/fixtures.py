@@ -28,6 +28,8 @@ from repro.analysis.contracts import Fixture
 QL_Q, QL_L, QL_TOPC = 6, 4096, 32
 ST_L, ST_D, ST_Q, ST_C, ST_KP = 4096, 32, 6, 48, 16
 FIT_L, FIT_B, FIT_CHUNK, FIT_K = 2048, 48, 256, 4
+OL_L, OL_B, OL_CHUNK, OL_K = 1536, 40, 192, 3
+OL_CAP, OL_D, OL_ML = 4096, 48, 256
 M_PROBE, K_TOP = 4, 5
 
 
@@ -222,6 +224,99 @@ def sharded_fit_round() -> Fixture:
     return Fixture(fn=fn, args=(state, idx, w),
                    dims={"L": FIT_L, "B": FIT_B, "steps": S,
                          "P": jax.device_count()})
+
+
+# ------------------------------------------------------------------ online --
+def _online_parts():
+    """A refit-round toy built through the SAME helper the OnlineRefitLoop
+    uses (online/refit.make_refit_round): drained traffic = 120 queries
+    self-labeled with 5 served ids each, label vectors = the live corpus
+    [OL_L, d]."""
+    import jax
+    from repro.core.index import IRLIConfig
+    from repro.online.refit import make_refit_round
+    cfg = IRLIConfig(d=16, n_labels=OL_L, n_buckets=OL_B, n_reps=2,
+                     d_hidden=32, K=OL_K, rounds=1, epochs_per_round=2,
+                     batch_size=48, lr=2e-3, affinity_chunk=OL_CHUNK, seed=3)
+    from repro.core.network import ScorerConfig, scorer_init
+    scfg = ScorerConfig(d_in=cfg.d, d_hidden=cfg.d_hidden,
+                        n_buckets=cfg.n_buckets, n_reps=cfg.n_reps,
+                        loss=cfg.loss)
+    params = scorer_init(jax.random.PRNGKey(3), scfg)
+    rng = np.random.default_rng(3)
+    nq = 120
+    x = rng.normal(size=(nq, cfg.d)).astype(np.float32)
+    ids = rng.integers(0, OL_L, (nq, 5)).astype(np.int32)
+    mask = np.ones((nq, 5), np.float32)
+    lv = rng.normal(size=(OL_L, cfg.d)).astype(np.float32)
+    engine, data, state = make_refit_round(
+        cfg, params=params, assign=np.zeros((cfg.n_reps, OL_L), np.int32),
+        x=x, label_ids=ids, label_mask=mask, label_vecs=lv,
+        rng=jax.random.PRNGKey(3), rounds=1)
+    idx, w = engine.round_batches(nq, 0, 0)
+    return cfg, engine, params, data, state, idx, w
+
+
+_OL_DIMS = {"L": OL_L, "B": OL_B, "chunk": OL_CHUNK, "K": OL_K}
+
+
+def online_refit_round() -> Fixture:
+    """One compiled incremental refit round over drained serve traffic."""
+    _, eng, _, data, state, idx, w = _online_parts()
+    fn = lambda s, i, ww: eng._round_body(s, i, ww, data, None)
+    return Fixture(fn=fn, args=(state, idx, w), dims=dict(_OL_DIMS),
+                   donate_argnums=(0,))
+
+
+def online_refit_dense_control() -> Fixture:
+    """Dense [L, B] affinity + re-partition over the refit dims — MUST
+    trip the [L, B] detector."""
+    import jax
+    from repro.core import repartition as RP
+    cfg, _, params, data, _, _, _ = _online_parts()
+    fn = lambda p, lv: RP.repartition(
+        RP.affinity_ann(p, lv, cfg.loss), cfg.K, cfg.n_buckets, "exact",
+        jax.random.PRNGKey(0))
+    return Fixture(fn=fn, args=(params, data.label_vecs),
+                   dims=dict(_OL_DIMS))
+
+
+def _swap_args():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(23)
+    R, B = 2, 24
+    assign = jnp.asarray(rng.integers(0, B, (R, OL_CAP)), jnp.int32)
+    tomb = jnp.zeros((OL_CAP,), bool).at[:100].set(True)
+    vecs = jnp.asarray(rng.normal(size=(OL_CAP, OL_D)), jnp.float32)
+    return B, assign, tomb, vecs
+
+
+def online_swap_no_copy() -> Fixture:
+    """The artifact swap's device work: rebuild_members over the full-
+    capacity assignment, the [cap, d] payload passing through untouched."""
+    from repro.artifact import rebuild_members
+    B, assign, tomb, vecs = _swap_args()
+
+    def fn(a, t, v):
+        members, load = rebuild_members(a, t, B=B, max_load=OL_ML)
+        return members, load, v      # payload moves by reference
+
+    return Fixture(fn=fn, args=(assign, tomb, vecs),
+                   dims={"cap": OL_CAP, "d": OL_D})
+
+
+def online_swap_copy_control() -> Fixture:
+    """Same rebuild, but the payload is touched (a full [cap, d] copy) —
+    MUST trip both the dim detector and the intermediate budget."""
+    from repro.artifact import rebuild_members
+    B, assign, tomb, vecs = _swap_args()
+
+    def fn(a, t, v):
+        members, load = rebuild_members(a, t, B=B, max_load=OL_ML)
+        return members, load, v * 1.0     # the copy the contract forbids
+
+    return Fixture(fn=fn, args=(assign, tomb, vecs),
+                   dims={"cap": OL_CAP, "d": OL_D})
 
 
 # ----------------------------------------------------------- search cache --

@@ -1,0 +1,13 @@
+"""repro.artifact — the ONE versioned index artifact (docs/online.md).
+
+Unifies what used to live in three places — FitState's scorer params +
+assign, the streaming StreamSnapshot (members/delta/tombstones/vecs), and
+the QuantizedStore — under a single immutable, checksummed, monotonically
+versioned pytree with atomic persistence through CheckpointManager. Every
+zero-downtime swap surface (MutableIRLIIndex.install_artifact,
+IRLIIndex.install_artifact, the OnlineRefitLoop) moves these.
+"""
+from repro.artifact.artifact import (ArtifactIntegrityError, IndexArtifact,
+                                     rebuild_members)
+
+__all__ = ["IndexArtifact", "ArtifactIntegrityError", "rebuild_members"]

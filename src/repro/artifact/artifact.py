@@ -1,0 +1,319 @@
+"""IndexArtifact — the versioned, checksummed unit of index state.
+
+ROADMAP's "close the serve→fit loop" item starts from a refactor: FitState
+(scorer params + assign), the streaming snapshot (members/delta/tombstone/
+vecs), and the QuantizedStore must travel as ONE artifact, or a background
+refit could pair new scorer params with an old member matrix somewhere
+between fit, checkpoint, and serve. This module is that unit:
+
+  - **immutable**: a frozen dataclass / registered pytree. Mutation =
+    build a new artifact (``seal`` recomputes the digest).
+  - **monotonically versioned**: ``version`` is a strictly increasing
+    integer; install sites (stream/mutable_index.install_artifact,
+    core/index.IRLIIndex.install_artifact) REJECT a version that does not
+    advance the serving epoch, so a late-arriving stale refit can never
+    roll an index back. ``SearchResult.epoch`` names the artifact version
+    a response was served against — the end-to-end bit-exactness handle
+    (tests/test_online.py hammers searches across swaps on it).
+  - **checksummed**: sha256 over every leaf's name/dtype/shape/bytes plus
+    the static config. ``verify()`` recomputes; persistence via
+    CheckpointManager adds the npz-level digest on top (checkpoint/
+    checkpointer.py), so both the semantic content and the container are
+    integrity-checked on restore.
+
+The swap path is a pointer flip: building an artifact from a snapshot (and
+installing it back) passes vecs / store / tombstone by REFERENCE. The
+``online.swap_no_index_copy`` contract (analysis/fixtures.py) proves the
+device work of a swap never materializes a [capacity, d] copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition as PT
+from repro.models.module import flatten_with_paths
+from repro.store import quantized as ST
+from repro.stream.delta import DeltaState, delta_init
+
+
+class ArtifactIntegrityError(RuntimeError):
+    """Artifact content does not match its recorded checksum."""
+
+
+def _round_up(x: int, mult: int = 8) -> int:
+    return ((max(x, 1) + mult - 1) // mult) * mult
+
+
+@partial(jax.jit, static_argnames=("B", "max_load"))
+def rebuild_members(assign, tombstone, *, B: int, max_load: int):
+    """Rebuild the inverted member matrix from a full-capacity assignment:
+    dead or never-issued slots (tombstoned, or already holding the sentinel
+    B) go to an extra bucket B, the index is built over B+1 buckets, and
+    the sentinel column is sliced off — the same exactness trick as
+    stream/compaction. assign [R, capacity], tombstone [capacity] ->
+    (members [R, B, max_load], load [R, B]).
+
+    This is the ONLY device work on the artifact swap path — note its
+    inputs do not include vecs/codes: the payload tiers move by reference
+    (proven by the ``online.swap_no_index_copy`` contract)."""
+    masked = jnp.where(tombstone[None, :], B, assign)
+    idx = PT.build_inverted_index(masked, B + 1, max_load)
+    return idx.members[:, :B], idx.load[:, :B].astype(jnp.int32)
+
+
+def _digest(version: int, n_total: int, meta: tuple, named_leaves) -> str:
+    """sha256 over (version, n_total, static meta) + every array leaf's
+    path/dtype/shape/bytes, in sorted-path order."""
+    h = hashlib.sha256()
+    h.update(repr((int(version), int(n_total), tuple(meta))).encode())
+    for path, leaf in sorted(named_leaves, key=lambda kv: kv[0]):
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(path.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IndexArtifact:
+    """One complete, immutable index state at one version.
+
+    Array leaves (the pytree children):
+      params     stacked R-rep scorer params (the FitState side)
+      members    [R, B, ML] inverted member matrix (pad -1)
+      delta      DeltaState: [R, B, DL] append segments + fill
+      tombstone  [capacity] bool
+      load       [R, B] int32 live loads
+      assign     [R, capacity] int32 bucket per id (B = unused slot)
+      vecs       [capacity, d] fp32 vector buffer (also the refine tier)
+      store      optional QuantizedStore coarse tier over the same rows
+      replicas   optional [R, B, RL] int32 hot-bucket replica segments
+                 (repro.online.policy; gathered like delta members when
+                 SearchParams.hot_replicas=True)
+
+    Static aux: version, n_total, meta (sorted (key, value) config pairs:
+    d/n_buckets/n_reps/capacity/loss/store_dtype/store_block/n_base),
+    checksum. The checksum certifies a SEALED artifact: constructors here
+    compute it; anything that transforms the leaves must re-seal
+    (``reseal()``) before ``verify()`` can pass again.
+    """
+    version: int
+    params: dict
+    members: jnp.ndarray
+    delta: DeltaState
+    tombstone: jnp.ndarray
+    load: jnp.ndarray
+    assign: jnp.ndarray
+    vecs: jnp.ndarray
+    n_total: int
+    meta: tuple
+    store: ST.QuantizedStore | None = None
+    replicas: jnp.ndarray | None = None
+    checksum: str = ""
+
+    # ------------------------------------------------------------- pytree --
+    def tree_flatten(self):
+        children = (self.params, self.members, self.delta.members,
+                    self.delta.fill, self.tombstone, self.load, self.assign,
+                    self.vecs, self.store, self.replicas)
+        aux = (self.version, self.n_total, self.meta, self.checksum)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (params, members, dmem, dfill, tomb, load, assign, vecs, store,
+         replicas) = children
+        return cls(version=aux[0], params=params, members=members,
+                   delta=DeltaState(members=dmem, fill=dfill),
+                   tombstone=tomb, load=load, assign=assign, vecs=vecs,
+                   n_total=aux[1], meta=aux[2], store=store,
+                   replicas=replicas, checksum=aux[3])
+
+    # ------------------------------------------------------------ identity --
+    @property
+    def meta_dict(self) -> dict:
+        return dict(self.meta)
+
+    def _named_leaves(self) -> list:
+        out = [("params/" + p, v) for p, v in flatten_with_paths(self.params)]
+        out += [("members", self.members), ("delta_members",
+                self.delta.members), ("delta_fill", self.delta.fill),
+                ("tombstone", self.tombstone), ("load", self.load),
+                ("assign", self.assign), ("vecs", self.vecs)]
+        if self.store is not None:
+            out.append(("store_codes", self.store.codes))
+            if self.store.scales is not None:
+                out.append(("store_scales", self.store.scales))
+        if self.replicas is not None:
+            out.append(("replicas", self.replicas))
+        return out
+
+    def reseal(self) -> "IndexArtifact":
+        """Recompute the checksum over the current leaves."""
+        digest = _digest(self.version, self.n_total, self.meta,
+                         self._named_leaves())
+        return dataclasses.replace(self, checksum=digest)
+
+    def verify(self) -> None:
+        """Raise ArtifactIntegrityError unless content matches checksum."""
+        digest = _digest(self.version, self.n_total, self.meta,
+                         self._named_leaves())
+        if digest != self.checksum:
+            raise ArtifactIntegrityError(
+                f"artifact v{self.version}: content digest {digest[:12]}… "
+                f"does not match recorded {self.checksum[:12] or '<unset>'}…")
+
+    def with_version(self, version: int) -> "IndexArtifact":
+        """Same content at a new version (re-sealed). Used when an already
+        built artifact is re-installed after the serving epoch moved on —
+        versions name install EVENTS, content may repeat."""
+        return dataclasses.replace(self, version=int(version)).reseal()
+
+    # -------------------------------------------------------- construction --
+    @classmethod
+    def build(cls, *, version: int, params, members, delta, tombstone, load,
+              assign, vecs, n_total: int, meta: dict,
+              store=None, replicas=None) -> "IndexArtifact":
+        """Seal a new artifact from parts (the OnlineRefitLoop's exit)."""
+        art = cls(version=int(version), params=params, members=members,
+                  delta=delta, tombstone=tombstone, load=load, assign=assign,
+                  vecs=vecs, n_total=int(n_total),
+                  meta=tuple(sorted(meta.items())), store=store,
+                  replicas=replicas)
+        return art.reseal()
+
+    @classmethod
+    def from_snapshot(cls, snap, cfg, *, version: int, capacity: int,
+                      store_block: int = 32, n_base: int | None = None,
+                      replicas=None) -> "IndexArtifact":
+        """Wrap a stream.StreamSnapshot (by reference — no copies)."""
+        meta = {"d": cfg.d, "n_buckets": cfg.n_buckets, "n_reps": cfg.n_reps,
+                "capacity": int(capacity), "loss": cfg.loss,
+                "store_dtype": (snap.store.dtype if snap.store is not None
+                                else "fp32"),
+                "store_block": (snap.store.block if snap.store is not None
+                                else store_block),
+                "n_base": int(n_base if n_base is not None else snap.n_total)}
+        return cls.build(
+            version=version, params=snap.params, members=snap.members,
+            delta=snap.delta, tombstone=snap.tombstone, load=snap.load,
+            assign=snap.assign, vecs=snap.vecs, n_total=snap.n_total,
+            meta=meta, store=snap.store,
+            replicas=replicas if replicas is not None
+            else getattr(snap, "replicas", None))
+
+    @classmethod
+    def from_mutable(cls, midx, *, version: int | None = None
+                     ) -> "IndexArtifact":
+        """Snapshot a MutableIRLIIndex as an artifact. Default version =
+        the snapshot's epoch (install back is then a no-op version-wise;
+        pass an explicit higher version to republish)."""
+        snap = midx.snapshot
+        return cls.from_snapshot(
+            snap, midx.cfg,
+            version=snap.epoch if version is None else version,
+            capacity=midx.capacity, store_block=midx.store_block,
+            n_base=midx.n_base)
+
+    @classmethod
+    def from_index(cls, index, base_vecs, *, version: int = 0,
+                   capacity: int | None = None, delta_len: int | None = None,
+                   store_dtype: str = "fp32", store_block: int = 32
+                   ) -> "IndexArtifact":
+        """Wrap a fitted frozen IRLIIndex (+ its corpus) — the offline-fit
+        entry into the artifact world. Builds the full-capacity buffers the
+        streaming surfaces need (one copy, at build time — NOT on the swap
+        path)."""
+        from repro.stream.mutable_index import MutableIRLIIndex
+        midx = MutableIRLIIndex(index, base_vecs, capacity=capacity,
+                                delta_len=delta_len, store_dtype=store_dtype,
+                                store_block=store_block)
+        return cls.from_mutable(midx, version=version)
+
+    # -------------------------------------------------------- persistence --
+    def state_dict(self) -> dict:
+        arrays = {
+            "members": self.members, "delta_members": self.delta.members,
+            "delta_fill": self.delta.fill, "tombstone": self.tombstone,
+            "load": self.load, "assign": self.assign, "vecs": self.vecs,
+        }
+        arrays.update(ST.store_to_arrays(self.store))
+        if self.replicas is not None:
+            arrays["replicas"] = self.replicas
+        return {"scorer": self.params, "artifact": arrays}
+
+    def extra(self) -> dict:
+        return {"artifact_version": int(self.version),
+                "n_total": int(self.n_total),
+                "checksum": self.checksum, **self.meta_dict}
+
+    def save(self, manager) -> int:
+        """Persist through CheckpointManager at step == version (atomic
+        write-rename + npz digest are the manager's job). Returns the
+        step."""
+        manager.save(int(self.version), self.state_dict(), extra=self.extra())
+        return int(self.version)
+
+    @classmethod
+    def restore(cls, manager, step: int | None = None) -> "IndexArtifact":
+        """Load + verify an artifact from a CheckpointManager (the newest
+        intact step when ``step`` is None). Raises ArtifactIntegrityError
+        when the recorded artifact checksum does not match the content —
+        distinct from npz-level corruption, which the manager itself
+        detects and skips."""
+        if step is None:
+            step, tree, manifest = manager.restore_latest()
+        else:
+            tree, manifest = manager.restore(step)
+        extra = manifest.get("extra", {})
+        arrays = tree["artifact"]
+        meta_keys = ("d", "n_buckets", "n_reps", "capacity", "loss",
+                     "store_dtype", "store_block", "n_base")
+        meta = {k: extra[k] for k in meta_keys if k in extra}
+        store = ST.store_from_arrays(
+            arrays, str(extra.get("store_dtype", "fp32")),
+            int(extra.get("store_block", 32)))
+        art = cls(
+            version=int(extra.get("artifact_version", step)),
+            params=jax.tree.map(jnp.asarray, tree["scorer"]),
+            members=jnp.asarray(arrays["members"], jnp.int32),
+            delta=DeltaState(
+                members=jnp.asarray(arrays["delta_members"], jnp.int32),
+                fill=jnp.asarray(arrays["delta_fill"], jnp.int32)),
+            tombstone=jnp.asarray(arrays["tombstone"], bool),
+            load=jnp.asarray(arrays["load"], jnp.int32),
+            assign=jnp.asarray(arrays["assign"], jnp.int32),
+            vecs=jnp.asarray(arrays["vecs"], jnp.float32),
+            n_total=int(extra["n_total"]),
+            meta=tuple(sorted(meta.items())), store=store,
+            replicas=(jnp.asarray(arrays["replicas"], jnp.int32)
+                      if "replicas" in arrays else None),
+            checksum=str(extra.get("checksum", "")))
+        art.verify()
+        return art
+
+    # ------------------------------------------------------------- install --
+    def install(self, target) -> None:
+        """Swap this artifact into a serving surface (MutableIRLIIndex or
+        frozen IRLIIndex) — dispatches to its ``install_artifact``."""
+        install = getattr(target, "install_artifact", None)
+        if install is None:
+            raise TypeError(
+                f"{type(target).__name__} has no install_artifact — "
+                "artifact swap targets are IRLIIndex / MutableIRLIIndex")
+        install(self)
+
+    def empty_delta(self) -> DeltaState:
+        """A fresh, all-empty delta shaped like this artifact's (a refit
+        absorbs delta inserts into the base members, so the swapped-in
+        snapshot restarts with empty segments)."""
+        R, B, DL = self.delta.members.shape
+        return delta_init(R, B, DL)

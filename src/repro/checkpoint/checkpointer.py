@@ -5,23 +5,50 @@ Layout:  <dir>/step_<n>/arrays.npz + manifest.json ; a checkpoint only counts
 once `manifest.json` exists (written LAST, fsync'd) — a killed writer leaves a
 garbage step dir that is ignored and garbage-collected on the next save.
 
+Torn-write hardening: `arrays.npz` is written to a `.tmp` staging name,
+fsync'd, renamed into place, and its sha256 is recorded in the manifest;
+`restore` verifies the digest (CheckpointCorruptError on mismatch) and
+`restore_latest` skips-and-warns past a corrupt newest step to the most
+recent intact one — a torn or bit-rotted write costs one checkpoint, never
+the ability to restore (tests/test_checkpoint.py pins this with a
+truncated npz).
+
 Elastic restore: arrays are saved as full (unsharded) numpy; `restore` takes
 target shardings so the same checkpoint can be loaded onto ANY mesh shape
 (the trainer's elastic re-mesh path, tests/test_elastic.py).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 import time
+import warnings
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
 
 from repro.models.module import flatten_with_paths
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint exists but fails integrity checks (bad digest,
+    truncated npz, unreadable manifest)."""
+
+
+def _sha256(path: str, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
 
 
 def _unflatten(flat: dict[str, Any]) -> Any:
@@ -61,9 +88,18 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        # stage arrays.npz under a tmp name, fsync, rename: a crash mid-write
+        # can never leave a plausibly-named-but-torn npz behind, and the
+        # manifest digest is computed over exactly the bytes that survive
+        apath = os.path.join(tmp, "arrays.npz")
+        with open(apath + ".tmp", "wb") as f:     # file handle: np.savez
+            np.savez(f, **flat)                   # won't append ".npz"
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(apath + ".tmp", apath)
         manifest = {"step": step, "time": time.time(),
-                    "n_arrays": len(flat), "extra": extra}
+                    "n_arrays": len(flat), "extra": extra,
+                    "checksum": {"arrays.npz": _sha256(apath)}}
         mpath = os.path.join(tmp, "manifest.json")
         with open(mpath, "w") as f:
             json.dump(manifest, f)
@@ -104,23 +140,67 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore_latest(self, shardings: Any | None = None) -> tuple[int, Any, dict]:
-        """Restore the newest complete checkpoint -> (step, tree, manifest).
+        """Restore the newest INTACT checkpoint -> (step, tree, manifest).
 
         Convenience for serve-time restore of streaming mutable-index state
         (stream/mutable_index.MutableIRLIIndex.save/load_state), where the
-        caller wants "whatever survived" rather than a specific step."""
-        step = self.latest_step()
-        if step is None:
+        caller wants "whatever survived" rather than a specific step. A
+        corrupt newest step (torn write, bad digest, truncated npz) is
+        skipped with a warning and the next older one is tried — losing the
+        last save must not lose the ability to restore."""
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no complete checkpoint under {self.dir}")
-        tree, manifest = self.restore(step, shardings)
-        return step, tree, manifest
+        for step in reversed(steps):
+            try:
+                tree, manifest = self.restore(step, shardings)
+                return step, tree, manifest
+            except (CheckpointCorruptError, zipfile.BadZipFile, ValueError,
+                    EOFError, OSError, json.JSONDecodeError, KeyError) as e:
+                warnings.warn(
+                    f"checkpoint step {step} under {self.dir} is corrupt "
+                    f"({type(e).__name__}: {e}); falling back to an older "
+                    f"step", stacklevel=2)
+        raise FileNotFoundError(
+            f"no intact checkpoint under {self.dir} "
+            f"(all {len(steps)} candidate steps corrupt)")
+
+    def verify(self, step: int) -> None:
+        """Integrity-check one step without loading arrays into memory:
+        raises CheckpointCorruptError on a digest mismatch. Checkpoints
+        from before digests were recorded verify trivially."""
+        path = os.path.join(self.dir, f"step_{step:012d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable manifest ({e})") from e
+        want = (manifest.get("checksum") or {}).get("arrays.npz")
+        if want is None:
+            return
+        apath = os.path.join(path, "arrays.npz")
+        try:
+            got = _sha256(apath)
+        except OSError as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable arrays.npz ({e})") from e
+        if got != want:
+            raise CheckpointCorruptError(
+                f"step {step}: arrays.npz sha256 mismatch "
+                f"(manifest {want[:12]}…, file {got[:12]}…)")
 
     def restore(self, step: int, shardings: Any | None = None) -> tuple[Any, dict]:
         path = os.path.join(self.dir, f"step_{step:012d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        with np.load(os.path.join(path, "arrays.npz")) as z:
-            flat = {k: z[k] for k in z.files}
+        self.verify(step)
+        try:
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+        except (zipfile.BadZipFile, ValueError, EOFError, OSError) as e:
+            raise CheckpointCorruptError(
+                f"step {step}: arrays.npz unreadable ({e})") from e
         tree = _unflatten(flat)
         if shardings is not None:
             flat_sh = dict(flatten_with_paths(shardings))

@@ -97,7 +97,7 @@ def _base_specs(base, axes):
 
 def local_search(scorer_params, members, base_shard, queries,
                  params: SearchParams | None = None, *,
-                 delta_members=None, tombstone=None,
+                 delta_members=None, tombstone=None, epoch: int = 0,
                  cache: SA.PipelineCache | None = None,
                  m=None, tau=None, k=None, loss_kind=None, metric=None,
                  mode=None, topC=None):
@@ -109,6 +109,9 @@ def local_search(scorer_params, members, base_shard, queries,
     streaming delta segments and deletion mask — candidates are unioned from
     base + delta and tombstoned ids are dropped before counting, so each
     shard of a distributed deployment can take online updates independently.
+    ``epoch`` names the artifact version these members/params came from
+    (docs/online.md) and is echoed on the ``SearchResult`` so distributed
+    responses carry the same provenance as the mutable serving path.
 
     Typed path -> :class:`SearchResult` with LOCAL ids (-1 where no
     candidate survived). ``params.mode="auto"`` resolves from L_loc and the
@@ -136,7 +139,7 @@ def local_search(scorer_params, members, base_shard, queries,
                                         queries, r, delta_members, tombstone,
                                         cache)
     return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
-                        mode=r.mode)
+                        epoch=epoch, mode=r.mode)
 
 
 def _merge_across_shards(ids, scores, n_cand, k: int, axes):
@@ -151,7 +154,7 @@ def _merge_across_shards(ids, scores, n_cand, k: int, axes):
 
 
 def make_distributed_search(mesh: Mesh, params: SearchParams | None = None, *,
-                            corpus_axes=("data",),
+                            corpus_axes=("data",), epoch: int = 0,
                             cache: SA.PipelineCache | None = None,
                             m=None, tau=None, k=None, loss_kind=None,
                             metric=None, mode=None, topC=None):
@@ -212,7 +215,7 @@ def make_distributed_search(mesh: Mesh, params: SearchParams | None = None, *,
         L_loc = base.shape[1]
         resolved = _resolve(sp, L_loc, queries.shape[0])
         return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
-                            mode=resolved.mode)
+                            epoch=epoch, mode=resolved.mode)
 
     return search
 
@@ -228,6 +231,7 @@ def shard_corpus(base, n_shards: int):
 def shard_search_local(scorer_params, members, base_shard, queries,
                        params: SearchParams | None = None, *,
                        q_chunk: int = 512, delta_members=None, tombstone=None,
+                       epoch: int = 0,
                        cache: SA.PipelineCache | None = None,
                        m=None, tau=None, k=None, topC=None, loss_kind=None,
                        metric=None):
@@ -277,10 +281,11 @@ def shard_search_local(scorer_params, members, base_shard, queries,
     if legacy:
         return ids, scores
     return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
-                        mode="compact")
+                        epoch=epoch, mode="compact")
 
 
 def make_production_search(mesh: Mesh, params: SearchParams | None = None, *,
+                           epoch: int = 0,
                            cache: SA.PipelineCache | None = None,
                            m=None, tau=None, k=None, topC=None,
                            loss_kind=None, metric=None):
@@ -332,7 +337,7 @@ def make_production_search(mesh: Mesh, params: SearchParams | None = None, *,
         if legacy:
             return ids, scores
         return SearchResult(ids=ids, scores=scores, n_candidates=n_cand,
-                            mode="compact")
+                            epoch=epoch, mode="compact")
 
     return search
 

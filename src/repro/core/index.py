@@ -74,6 +74,7 @@ class IRLIIndex:
         self.assign = PT.hash_init(cfg.n_labels, cfg.n_buckets, cfg.n_reps,
                                    cfg.seed)
         self.index: PT.InvertedIndex | None = None
+        self.epoch = 0   # artifact version served; bumped by install_artifact
 
     # ---------------------------------------------------------------- fit --
     def fit(self, x_train, label_ids, label_mask=None, label_vecs=None,
@@ -231,7 +232,49 @@ class IRLIIndex:
         if not hasattr(base, "codes"):        # raw corpus; stores pass as-is
             base = jnp.asarray(base)
         return cache.search(params, self.params, self.index.members,
-                            base, jnp.asarray(queries), staged=staged)
+                            base, jnp.asarray(queries), epoch=self.epoch,
+                            staged=staged)
+
+    # ----------------------------------------------------- artifact swap --
+    def install_artifact(self, artifact) -> None:
+        """Swap in a sealed :class:`repro.artifact.IndexArtifact`.
+
+        The frozen-index flavor of the zero-downtime swap (docs/online.md):
+        params/assign/members are replaced wholesale and ``epoch`` jumps to
+        the artifact version, so every subsequent ``SearchResult.epoch``
+        names exactly the artifact that produced it. Stale versions
+        (``version <= self.epoch``) are rejected — installs must move the
+        epoch forward. Tombstoned rows are dropped from the rebuilt member
+        matrix; the corpus itself is NOT stored here (searches keep passing
+        ``base`` explicitly).
+        """
+        cfg = self.cfg
+        md = artifact.meta_dict
+        for key, want in (("d", cfg.d), ("n_buckets", cfg.n_buckets),
+                          ("n_reps", cfg.n_reps)):
+            if key in md and int(md[key]) != int(want):
+                raise ValueError(
+                    f"artifact {key}={md[key]} != index {key}={want}")
+        if int(artifact.version) <= int(self.epoch):
+            raise ValueError(
+                f"stale artifact: version {artifact.version} <= serving "
+                f"epoch {self.epoch}")
+        L = cfg.n_labels
+        if int(artifact.n_total) < L:
+            raise ValueError(
+                f"artifact covers {artifact.n_total} labels < index "
+                f"n_labels={L}")
+        assign = jnp.asarray(artifact.assign)[:, :L]
+        max_load = int(artifact.members.shape[-1])
+        from repro.artifact import rebuild_members
+        members, load = rebuild_members(
+            assign, jnp.asarray(artifact.tombstone)[:L],
+            B=cfg.n_buckets, max_load=max_load)
+        self.params = artifact.params
+        self.assign = assign
+        self.index = PT.InvertedIndex(members=members, load=load,
+                                      max_load=max_load)
+        self.epoch = int(artifact.version)
 
     def as_searcher(self, base, cache: SA.PipelineCache | None = None
                     ) -> SA.Searcher:

@@ -45,12 +45,16 @@ def top_buckets(params, queries, m: int, loss_kind: str = "softmax_bce"):
 
 
 def gather_members(members: jnp.ndarray, bucket_idx: jnp.ndarray,
-                   delta_members: jnp.ndarray | None = None):
+                   delta_members: jnp.ndarray | None = None,
+                   probe_keep: jnp.ndarray | None = None):
     """Gather probed-bucket member lists from raw member matrices.
 
     members [R, B, ML], bucket_idx [R, Q, m], optional delta_members
     [R, B, DL] (the streaming delta segments — appended per probed bucket so
-    freshly-inserted items are found immediately).
+    freshly-inserted items are found immediately), optional probe_keep
+    [R, Q, m] bool (the adaptive-m(q) policy: candidates from a masked-out
+    probe become -1 pads, so shapes stay static while easy queries
+    contribute fewer candidates).
     Returns candidate ids [Q, R·m·(ML[+DL])] (pad -1).
     """
     R, Q, m = bucket_idx.shape
@@ -62,7 +66,38 @@ def gather_members(members: jnp.ndarray, bucket_idx: jnp.ndarray,
     if delta_members is not None:
         dcands = jax.vmap(per_rep)(delta_members, bucket_idx)  # [R, Q, m, DL]
         cands = jnp.concatenate([cands, dcands], axis=-1)
+    if probe_keep is not None:
+        cands = jnp.where(probe_keep[..., None], cands, -1)
     return jnp.moveaxis(cands, 0, 1).reshape(Q, -1)
+
+
+def probe_keep_mask(logits: jnp.ndarray, top_vals: jnp.ndarray,
+                    probe_mass: float) -> jnp.ndarray:
+    """The per-query probe-count policy m(q) (LIRA, PAPERS.md): keep probe
+    j of a rep iff the softmax mass of the probes BEFORE it is still short
+    of ``probe_mass`` — confident queries stop after 1–2 buckets, ambiguous
+    ones keep all m. The scorer trunk's own softmax is the predictor (no
+    separate head to train, and it can never disagree with the router that
+    picked the buckets). logits [R, Q, B], top_vals [R, Q, m] (top-m
+    logits, descending) -> bool [R, Q, m]; probe 0 is always kept.
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1, keepdims=True)     # [R, Q, 1]
+    p = jnp.exp(top_vals - lse)                                # [R, Q, m]
+    mass_before = jnp.cumsum(p, axis=-1) - p
+    return mass_before < probe_mass
+
+
+@partial(jax.jit, static_argnames=("m",))
+def predicted_probe_counts(params, queries, m: int, probe_mass: float):
+    """Effective probes per (rep, query) under the adaptive-m policy:
+    [R, Q] int32 in [1, m]. Telemetry companion of the serving path (the
+    refit loop and obs smoke record its distribution) — shares
+    probe_keep_mask with the pipeline, so the histogram is exactly what
+    serving does."""
+    logits = scorer_logits(params, queries)
+    vals, _ = jax.lax.top_k(logits, m)
+    keep = probe_keep_mask(logits, vals, probe_mass)
+    return jnp.sum(keep.astype(jnp.int32), axis=-1)
 
 
 def gather_candidates(index: InvertedIndex, bucket_idx: jnp.ndarray,
@@ -267,6 +302,11 @@ class QueryPipeline:
     metric: str = "angular"
     store_dtype: str = "fp32"      # "fp32" | "int8" | "bf16" (docs/store.md)
     refine_k: int = 0              # exact-refine depth k' (0 = auto)
+    adaptive_m: bool = False       # per-query m(q): see probe_keep_mask
+    probe_mass: float = 1.0        # mass target; 1.0 == keep every probe
+    #                                (probe_mass=1.0 takes the EXACT
+    #                                non-adaptive trace, so toggling
+    #                                adaptive_m alone changes nothing)
     # no loss_kind: bucket selection works on raw logits, which give the
     # same top-m as softmax OR sigmoid probabilities (both monotone) — the
     # training loss is irrelevant at serve time
@@ -278,6 +318,9 @@ class QueryPipeline:
         if self.store_dtype not in ("fp32", "int8", "bf16"):
             raise ValueError(f"unknown store_dtype {self.store_dtype!r} "
                              "(use 'fp32', 'int8', or 'bf16')")
+        if not 0.0 < self.probe_mass <= 1.0:
+            raise ValueError(f"probe_mass must be in (0, 1], got "
+                             f"{self.probe_mass!r}")
         if self.mode == "dense" and self.store_dtype != "fp32":
             raise ValueError(
                 "mode='dense' requires store_dtype='fp32' — the dense "
@@ -297,13 +340,15 @@ class QueryPipeline:
     def candidates(self, params, members, queries, delta_members=None,
                    tombstone=None):
         """Probe + gather: top-m buckets per rep -> flat candidate ids
-        [Q, R·m·(ML[+DL])] (pad -1), with streaming delta union and
-        tombstone masking. Bucket selection uses raw logits — the top-m set
-        matches scorer_probs under any loss while skipping a full
-        [R, Q, B] normalize."""
+        [Q, R·m·(ML[+DL])] (pad -1), with streaming delta union, tombstone
+        masking, and (``adaptive_m``) per-query probe truncation. Bucket
+        selection uses raw logits — the top-m set matches scorer_probs
+        under any loss while skipping a full [R, Q, B] normalize."""
         logits = scorer_logits(params, queries)
-        _, bidx = jax.lax.top_k(logits, self.m)
-        cands = gather_members(members, bidx, delta_members)
+        vals, bidx = jax.lax.top_k(logits, self.m)
+        keep = (probe_keep_mask(logits, vals, self.probe_mass)
+                if self.adaptive_m and self.probe_mass < 1.0 else None)
+        cands = gather_members(members, bidx, delta_members, probe_keep=keep)
         if tombstone is not None:
             cands = mask_tombstones(cands, tombstone)
         return cands
@@ -382,9 +427,9 @@ class QueryPipeline:
                 return sp.fence(fn(self, *args))
 
         logits = run("scorer_logits", _stage_logits, params, queries)
-        bidx = run("top_m", _stage_topm, logits)
-        cands = run("gather", _stage_gather, members, bidx, delta_members,
-                    tombstone)
+        bidx, keep = run("top_m", _stage_topm, logits)
+        cands = run("gather", _stage_gather, members, bidx, keep,
+                    delta_members, tombstone)
         if self.mode == "compact":
             cid, cnt, n_cand = run("freq_topc", _stage_freq_topc, cands)
             if store is not None and store.dtype != "fp32":
@@ -419,15 +464,18 @@ def _stage_logits(pipe: QueryPipeline, params, queries):
 
 @partial(jax.jit, static_argnames=("pipe",))
 def _stage_topm(pipe: QueryPipeline, logits):
-    _, bidx = jax.lax.top_k(logits, pipe.m)
-    return bidx
+    vals, bidx = jax.lax.top_k(logits, pipe.m)
+    if pipe.adaptive_m and pipe.probe_mass < 1.0:
+        return bidx, probe_keep_mask(logits, vals, pipe.probe_mass)
+    return bidx, None
 
 
 @partial(jax.jit, static_argnames=("pipe",))
-def _stage_gather(pipe: QueryPipeline, members, bidx, delta_members,
-                  tombstone):
+def _stage_gather(pipe: QueryPipeline, members, bidx, probe_keep,
+                  delta_members, tombstone):
     del pipe
-    cands = gather_members(members, bidx, delta_members)
+    cands = gather_members(members, bidx, delta_members,
+                           probe_keep=probe_keep)
     if tombstone is not None:
         cands = mask_tombstones(cands, tombstone)
     return cands

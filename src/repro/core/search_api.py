@@ -56,6 +56,15 @@ class SearchParams:
     mode: str = "auto"         # "auto" | "dense" | "compact"
     store_dtype: str = "fp32"  # vector tier: "fp32" | "int8" | "bf16"
     refine_k: int = 0          # exact-refine depth k' (0 = auto: max(4k,32))
+    adaptive_m: bool = False   # LIRA-style per-query probe count m(q):
+    #                            probes past ``probe_mass`` cumulative scorer
+    #                            mass are masked out of the gather, so easy
+    #                            queries touch fewer buckets (docs/online.md)
+    probe_mass: float = 1.0    # target cumulative top-m probability mass per
+    #                            rep; 1.0 keeps every probe (== adaptive off)
+    hot_replicas: bool = False  # gather hot-bucket replica segments built by
+    #                            the online refit loop (no-op when the
+    #                            serving snapshot carries none)
 
     def __post_init__(self):
         for name in ("m", "tau", "k", "topC"):
@@ -76,6 +85,15 @@ class SearchParams:
         if not isinstance(rk, int) or isinstance(rk, bool) or rk < 0:
             raise ValueError(
                 f"SearchParams.refine_k must be an int >= 0, got {rk!r}")
+        for name in ("adaptive_m", "hot_replicas"):
+            if not isinstance(getattr(self, name), bool):
+                raise ValueError(f"SearchParams.{name} must be a bool, got "
+                                 f"{getattr(self, name)!r}")
+        pm = self.probe_mass
+        if not isinstance(pm, (int, float)) or isinstance(pm, bool) \
+                or not 0.0 < float(pm) <= 1.0:
+            raise ValueError(
+                f"SearchParams.probe_mass must be in (0, 1], got {pm!r}")
         if self.mode == "dense" and self.store_dtype != "fp32":
             raise ValueError(
                 "mode='dense' cannot serve a quantized store "
@@ -106,7 +124,9 @@ class SearchParams:
                                mode=self.mode, topC=self.topC,
                                metric=self.metric,
                                store_dtype=self.store_dtype,
-                               refine_k=self.refine_k)
+                               refine_k=self.refine_k,
+                               adaptive_m=self.adaptive_m,
+                               probe_mass=float(self.probe_mass))
 
 
 @dataclasses.dataclass(frozen=True)

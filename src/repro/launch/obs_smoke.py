@@ -13,6 +13,9 @@ too), and asserts the registry snapshot is non-empty and contains:
   - batching + cache counters (serve_requests_total, queue wait,
     cache_hits/misses/compiles)
   - streaming gauges (stream_live, stream_delta_occupancy, ...)
+  - online-refit series: query-log traffic counters, one background refit
+    cycle's fit/cycle timings + loss, and the artifact-swap counters the
+    zero-downtime install records (stream_swaps_total, artifact_version)
 
 No HTTP port is opened — the point is that the registry itself is complete
 even with exposition off.
@@ -54,10 +57,11 @@ def main():
                             registry=registry)
     # mode pinned compact: the 100M-scale serving path (and its freq_topc
     # stage) is the one the smoke must prove observable
+    qlog = obs.QueryLog(capacity=256, registry=registry)
     server = IRLIServer(midx,
                         params=SearchParams(m=4, tau=1, k=10, mode="compact"),
                         max_batch=16, max_wait_ms=1.0, registry=registry,
-                        staged=True)
+                        staged=True, qlog=qlog)
     try:
         futs = [server.submit(data.queries[i]) for i in range(n_req)]
         results = [f.result(timeout=600) for f in futs]
@@ -75,8 +79,29 @@ def main():
     for _ in range(2):
         midx.search(data.queries[:8], fused, cache=server.cache)
 
+    # ---- online refit: one cycle off the server's query log + one swap ---
+    from repro.online import OnlineRefitLoop, RefitConfig
+    assert len(qlog) >= n_req          # the server sampled every batch
+    epoch0 = midx.epoch
+    loop = OnlineRefitLoop(midx, qlog, config=RefitConfig(
+        min_queries=n_req, rounds_per_cycle=1, hot_frac=0.05), registry=registry)
+    art = loop.run_cycle()
+    assert art is not None and midx.epoch > epoch0, "refit swap did not land"
+    art.verify()
+
     snap = registry.snapshot()
     assert snap, "registry snapshot is empty"
+    for key in ("qlog_seen_total", "qlog_logged_total", "qlog_fill",
+                "refit_cycles_total", "refit_rounds_total", "refit_loss",
+                "refit_n_reassigned", "refit_queries_total",
+                "refit_fit_seconds", "refit_cycle_seconds",
+                "refit_predicted_m_mean", "refit_artifact_version",
+                "stream_swaps_total", "stream_swap_seconds",
+                "artifact_version"):
+        assert key in snap, f"refit metric {key!r} missing: {sorted(snap)}"
+    assert snap["refit_cycles_total"]["value"] >= 1
+    assert snap["stream_swaps_total"]["value"] >= 1
+    assert snap["artifact_version"]["value"] == midx.epoch
     stages = sorted(k for k in snap if k.startswith("serve_stage_seconds"))
     assert stages, f"no per-stage histograms: {sorted(snap)}"
     for stage in ("scorer_logits", "top_m", "gather", "freq_topc"):
@@ -101,7 +126,8 @@ def main():
 
     print(f"obs smoke OK: {len(snap)} series, "
           f"{len(stages)} stage histograms, "
-          f"probe KL={probes['kl_vs_uniform']:.3f}")
+          f"probe KL={probes['kl_vs_uniform']:.3f}, "
+          f"refit epoch={midx.epoch}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ This package is a LEAF of the dependency graph: it imports nothing from
 without cycles.
 """
 from repro.obs.logger import MetricsLogger
+from repro.obs.qlog import QueryLog
 from repro.obs.registry import (COUNT_BUCKETS, LATENCY_BUCKETS, Counter,
                                 Gauge, Histogram, MetricRegistry,
                                 VectorCounter, bucket_index,
@@ -42,5 +43,5 @@ __all__ = [
     "MetricsLogger", "Span", "trace", "fence", "log_buckets", "bucket_index",
     "merge_snapshots", "load_balance_stats", "LATENCY_BUCKETS",
     "COUNT_BUCKETS", "DEFAULT_REGISTRY", "get_registry",
-    "start_metrics_server",
+    "start_metrics_server", "QueryLog",
 ]

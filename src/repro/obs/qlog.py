@@ -1,0 +1,124 @@
+"""QueryLog — sampled serve-time (query, result-ids) stream for online refit.
+
+IRLI improves partitions by iterating on query→item relevance (paper §3);
+LIRA (PAPERS.md) shows the signal worth iterating on is the LIVE query
+distribution, not the offline train split. The server can't afford to keep
+every query, so this is a sampled ring buffer: ``record`` keeps each batch
+row with probability ``sample`` and overwrites the oldest entries once
+``capacity`` is reached, so a drain always sees the most recent traffic.
+The logged label ids are the ids the index itself returned — serve-time
+self-relevance, exactly the affinity stream the OnlineRefitLoop
+(repro.online.refit) trains its incremental ``fit_round``s on.
+
+Numpy-only and lock-per-call like the rest of ``repro.obs`` (this package
+is a LEAF: no repro.core imports); buffers are allocated lazily on the
+first ``record`` so the log adapts to whatever (d, k) the server runs.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+__all__ = ["QueryLog"]
+
+
+class QueryLog:
+    """Thread-safe sampled ring buffer of (query vector, result ids).
+
+    capacity  max retained samples (oldest overwritten first)
+    sample    per-row keep probability in [0, 1] (0 disables retention
+              but keeps the traffic counters)
+    seed      sampling rng seed (deterministic logs for tests/benches)
+    registry  optional MetricRegistry: records qlog_logged_total /
+              qlog_seen_total counters and a qlog_fill gauge
+    """
+
+    def __init__(self, capacity: int = 4096, sample: float = 1.0,
+                 seed: int = 0, registry=None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if not 0.0 <= sample <= 1.0:
+            raise ValueError(f"sample must be in [0, 1], got {sample}")
+        self.capacity = int(capacity)
+        self.sample = float(sample)
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self._x = None          # [capacity, d] fp32, lazy
+        self._ids = None        # [capacity, k] int32, lazy
+        self._pos = 0           # next write slot (mod capacity)
+        self._n = 0             # valid rows, <= capacity
+        self._total = 0         # all rows ever logged (post-sampling)
+        self._reg = registry
+
+    def __len__(self) -> int:
+        with self._lock:
+            return self._n
+
+    @property
+    def total_logged(self) -> int:
+        with self._lock:
+            return self._total
+
+    def record(self, queries, ids) -> int:
+        """Log a served batch: queries [n, d] with their returned ids
+        [n, k] (pad -1 allowed — the refit loop masks them). Returns the
+        number of rows kept after sampling."""
+        q = np.asarray(queries, np.float32)
+        lab = np.asarray(ids, np.int32)
+        if q.ndim != 2 or lab.ndim != 2 or q.shape[0] != lab.shape[0]:
+            raise ValueError(
+                f"expected queries [n, d] and ids [n, k] with matching n, "
+                f"got {q.shape} and {lab.shape}")
+        with self._lock:
+            if self.sample < 1.0:
+                keep = self._rng.random(q.shape[0]) < self.sample
+                q, lab = q[keep], lab[keep]
+            n = q.shape[0]
+            if self._reg is not None:
+                self._reg.counter("qlog_seen_total").inc(
+                    float(np.asarray(queries).shape[0]))
+                self._reg.counter("qlog_logged_total").inc(float(n))
+            if n == 0:
+                return 0
+            if self._x is None:
+                self._x = np.zeros((self.capacity, q.shape[1]), np.float32)
+                self._ids = np.zeros((self.capacity, lab.shape[1]), np.int32)
+            if q.shape[1] != self._x.shape[1] or \
+                    lab.shape[1] != self._ids.shape[1]:
+                raise ValueError(
+                    f"shape drift: log holds d={self._x.shape[1]} "
+                    f"k={self._ids.shape[1]}, got d={q.shape[1]} "
+                    f"k={lab.shape[1]}")
+            if n >= self.capacity:          # batch alone fills the ring
+                self._x[:] = q[-self.capacity:]
+                self._ids[:] = lab[-self.capacity:]
+                self._pos, self._n = 0, self.capacity
+            else:
+                idx = (self._pos + np.arange(n)) % self.capacity
+                self._x[idx] = q
+                self._ids[idx] = lab
+                self._pos = int((self._pos + n) % self.capacity)
+                self._n = min(self.capacity, self._n + n)
+            self._total += n
+            if self._reg is not None:
+                self._reg.gauge("qlog_fill").set(self._n / self.capacity)
+            return n
+
+    def drain(self):
+        """Atomically take every logged sample: returns (x [m, d],
+        ids [m, k]) copies and empties the log — the refit loop's windowed
+        read. Empty log -> (0, d)/(0, k) arrays ((0, 0) before the first
+        record fixed d and k)."""
+        with self._lock:
+            if self._n == 0 or self._x is None:
+                d = 0 if self._x is None else self._x.shape[1]
+                k = 0 if self._ids is None else self._ids.shape[1]
+                return (np.zeros((0, d), np.float32),
+                        np.zeros((0, k), np.int32))
+            x = self._x[:self._n].copy()
+            ids = self._ids[:self._n].copy()
+            self._pos, self._n = 0, 0
+            if self._reg is not None:
+                self._reg.gauge("qlog_fill").set(0.0)
+            return x, ids

@@ -10,10 +10,12 @@ counter for per-bucket statistics:
                  like Prometheus). Fixed bounds make two snapshots mergeable
                  by elementwise addition, which is what makes cross-process
                  aggregation (shards, bench subprocesses) associative.
-  VectorCounter  a fixed-size int64 count vector (e.g. probes per
-                 (rep, bucket)) whose snapshot carries the load-balance
-                 summary (min/max/std/KL-vs-uniform) — the paper's §load
-                 balance metric, observable at serve time.
+  VectorCounter  a fixed-size count vector (e.g. probes per (rep, bucket))
+                 whose snapshot carries the load-balance summary
+                 (min/max/std/KL-vs-uniform) — the paper's §load balance
+                 metric, observable at serve time — plus ``decay(factor)``
+                 / ``reset()`` windowing so long-running servers track
+                 recent traffic (docs/online.md).
 
 Everything is thread-safe: the server micro-batcher, client threads, and
 the fit driver may record into one registry concurrently. Reads
@@ -157,6 +159,34 @@ class Histogram:
         with self._lock:
             return self._count
 
+    def quantile(self, q: float) -> float:
+        """Approximate q-quantile (0 <= q <= 1) from the bucket counts,
+        linearly interpolated inside the containing bucket. Observations in
+        the +Inf overflow bucket report the recorded max. Used by the swap
+        latency assertions (tests/test_online.py) so p99 claims come from
+        the SAME histograms operators monitor, not a side channel."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        with self._lock:
+            counts = self._counts.copy()
+            total, vmin, vmax = self._count, self._min, self._max
+        if total == 0:
+            return math.nan
+        target = q * total
+        cum = 0.0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                frac = (target - cum) / c
+                if i >= len(self.bounds):           # +Inf overflow bucket
+                    return float(vmax)
+                lo = self.bounds[i - 1] if i > 0 else min(vmin, self.bounds[0])
+                hi = self.bounds[i]
+                return float(lo + frac * (hi - lo))
+            cum += c
+        return float(vmax)
+
     def snapshot(self) -> dict:
         with self._lock:
             return {
@@ -171,10 +201,18 @@ class Histogram:
 
 
 class VectorCounter:
-    """Fixed-size vector of monotonic int64 counts (index -> count), for
-    per-bucket statistics: probe frequency per (rep, bucket), per-bucket
-    candidate contributions, ... Snapshot carries the load-balance summary
-    (:func:`load_balance_stats`) and the raw counts while small."""
+    """Fixed-size vector of counts (index -> count), for per-bucket
+    statistics: probe frequency per (rep, bucket), per-bucket candidate
+    contributions, ... Snapshot carries the load-balance summary
+    (:func:`load_balance_stats`) and the raw counts while small.
+
+    Counts are float64 (not int64) so :meth:`decay` — the exponential
+    forgetting the online refit loop applies so it sees RECENT traffic, not
+    all-time totals — commutes with :func:`merge_snapshots`: decay is an
+    elementwise scale and merge is an elementwise add, so
+    merge(decay(a), decay(b)) == decay(merge(a, b)) (property-tested in
+    tests/test_obs.py). Increments are still whole numbers; only decayed
+    tails are fractional."""
 
     kind = "vector"
     RAW_LIMIT = 65536       # snapshots include raw counts up to this size
@@ -183,7 +221,7 @@ class VectorCounter:
         if size < 1:
             raise ValueError(f"vector size must be >= 1, got {size}")
         self._lock = threading.Lock()
-        self._counts = np.zeros(int(size), np.int64)
+        self._counts = np.zeros(int(size), np.float64)
 
     @property
     def size(self) -> int:
@@ -196,13 +234,34 @@ class VectorCounter:
             raise ValueError(
                 f"expected shape {self._counts.shape}, got {counts.shape}")
         with self._lock:
-            self._counts += counts.astype(np.int64)
+            self._counts += counts.astype(np.float64)
 
     def inc_at(self, indices) -> None:
         """Increment by 1 at each index (repeats accumulate)."""
         idx = np.asarray(indices).ravel()
         with self._lock:
             np.add.at(self._counts, idx, 1)
+
+    def decay(self, factor: float) -> None:
+        """Exponentially forget: counts *= factor (0 <= factor <= 1).
+
+        Long-running servers call this on a window cadence so probe
+        frequencies track the live query distribution instead of
+        saturating; factor=0 is a hard reset."""
+        factor = float(factor)
+        if not 0.0 <= factor <= 1.0:
+            raise ValueError(f"decay factor must be in [0, 1], got {factor}")
+        with self._lock:
+            self._counts *= factor
+
+    def reset(self) -> np.ndarray:
+        """Windowed read: return the current counts and zero the vector —
+        one atomic step, so concurrent increments are never lost between
+        the read and the clear."""
+        with self._lock:
+            out = self._counts.copy()
+            self._counts[:] = 0.0
+            return out
 
     @property
     def value(self) -> np.ndarray:

@@ -1,0 +1,15 @@
+"""repro.online — query-aware background re-partitioning (docs/online.md).
+
+The serve→fit loop closed: an :class:`OnlineRefitLoop` drains the server's
+sampled query stream (obs.QueryLog) and probe-frequency counters, runs
+incremental fit rounds against that live traffic, seals the result as a
+versioned :class:`repro.artifact.IndexArtifact`, and atomically swaps it
+into the serving index (MutableIRLIIndex.install_artifact — a pointer
+flip; readers pin a snapshot per batch, so zero downtime). The
+query-aware policies (per-query predicted probe count m(q), hot-bucket
+replication) live in :mod:`repro.online.policy`.
+"""
+from repro.online.policy import build_replicas, hot_buckets
+from repro.online.refit import OnlineRefitLoop, RefitConfig
+
+__all__ = ["OnlineRefitLoop", "RefitConfig", "build_replicas", "hot_buckets"]

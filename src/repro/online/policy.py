@@ -1,0 +1,84 @@
+"""Query-aware serving policies fed by live traffic statistics.
+
+Two LIRA-flavored knobs ride on the probe-frequency stream the server
+already counts (``serve_bucket_probes``, a [R·B] VectorCounter):
+
+  - **adaptive probe count m(q)** is implemented in the query pipeline
+    itself (core/query.probe_keep_mask, SearchParams.adaptive_m /
+    probe_mass) — per query, probes past the ``probe_mass`` cumulative
+    softmax mass are dropped. This module only reports the predicted
+    counts for telemetry (OnlineRefitLoop.run_cycle).
+  - **hot-bucket replication** (:func:`build_replicas`): members of the
+    most-probed buckets are replicated into their runner-up bucket, so a
+    query whose top probe narrowly misses a hot item still retrieves it
+    from the second-choice bucket. Replicas are SHADOW copies: load
+    accounting tracks primary placements only, the tombstone masks
+    deleted replicated ids, and the pipeline gathers replica segments
+    exactly like delta segments (SearchParams.hot_replicas=True).
+
+Everything here runs host-side numpy at refit cadence — none of it is on
+the per-query path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import scorer_logits
+
+
+def hot_buckets(probe_counts, R: int, B: int, hot_frac: float) -> np.ndarray:
+    """Top-H most-probed buckets per rep, hottest first: [R, H] int.
+
+    ``probe_counts`` is the flat [R·B] (or [R, B]) counter vector — the
+    server's ``serve_bucket_probes``, ideally after windowed decay so old
+    traffic ages out. H = max(1, int(hot_frac * B)).
+    """
+    counts = np.asarray(probe_counts, np.float64).reshape(R, B)
+    H = max(1, int(hot_frac * B))
+    order = np.argsort(-counts, axis=1, kind="stable")
+    return order[:, :H]
+
+
+def build_replicas(params, vecs, members, tombstone, probe_counts, *,
+                   hot_frac: float = 0.05, replica_len: int = 8
+                   ) -> jnp.ndarray:
+    """Replicate hot-bucket members into their second-choice buckets.
+
+    For each rep r and each of its top-H hottest buckets (by probe count),
+    every live member id is also written into the replica segment of the
+    bucket the rep's scorer ranks NEXT for that id's vector (its runner-up
+    placement — or the top choice, when the hot bucket itself is not the
+    argmax). Segments are [R, B, replica_len] int32 with -1 padding;
+    overflow beyond ``replica_len`` is dropped in hotness order, so the
+    hottest buckets replicate first.
+
+    Returns the replica matrix to hang on the artifact/snapshot
+    (``StreamSnapshot.replicas``); serving gathers it alongside the delta
+    segments when ``SearchParams.hot_replicas=True``.
+    """
+    members = np.asarray(members)                       # [R, B, ML]
+    R, B, _ = members.shape
+    tomb = np.asarray(tombstone)
+    hot = hot_buckets(probe_counts, R, B, hot_frac)
+    replicas = np.full((R, B, int(replica_len)), -1, np.int32)
+    fill = np.zeros((R, B), np.int64)
+    for r in range(R):
+        # this rep's scorer only: slice the stacked params to a 1-rep view
+        p_r = jax.tree.map(lambda leaf: leaf[r:r + 1], params)
+        for b in hot[r]:
+            ids = members[r, b]
+            ids = ids[ids >= 0]
+            ids = ids[~tomb[ids]]
+            if ids.size == 0:
+                continue
+            logits = np.asarray(scorer_logits(p_r, jnp.asarray(
+                np.asarray(vecs)[ids])))[0]             # [n, B]
+            top2 = np.argsort(-logits, axis=1)[:, :2]   # runner-up choice
+            second = np.where(top2[:, 0] == b, top2[:, 1], top2[:, 0])
+            for i, b2 in zip(ids, second):
+                if fill[r, b2] < replica_len:
+                    replicas[r, b2, fill[r, b2]] = i
+                    fill[r, b2] += 1
+    return jnp.asarray(replicas)

@@ -1,0 +1,327 @@
+"""OnlineRefitLoop — background query-aware re-partitioning with
+zero-downtime artifact swap (docs/online.md).
+
+The serving stack already produces everything a refit needs as a side
+effect: the IRLIServer counts per-bucket probe frequencies into a
+``serve_bucket_probes`` VectorCounter and (when given an ``obs.QueryLog``)
+samples (query, served ids) pairs. One refit cycle:
+
+  1. **drain** the query log — the sampled live traffic since last cycle;
+  2. **fit** ``rounds_per_cycle`` incremental :class:`~repro.fit.engine.
+     FitEngine` rounds AGAINST THAT TRAFFIC: queries are the train points,
+     the ids the server returned are their (self-)labels, and the label
+     vectors are the index's own live rows — so buckets re-balance toward
+     what is actually being asked, the paper's iterative re-partitioning
+     driven by the serve stream instead of a static train set. A
+     ("data", "rep") mesh shards the rounds exactly like offline fit;
+  3. **seal** the result as a versioned :class:`repro.artifact.
+     IndexArtifact`: new scorer params + assignment, member matrix rebuilt
+     via :func:`repro.artifact.rebuild_members`, vecs / quantized codes /
+     tombstone carried from the serving snapshot BY REFERENCE (the
+     ``online.swap_no_index_copy`` contract proves no [capacity, d] copy),
+     optional hot-bucket replicas from the decayed probe counters
+     (:mod:`repro.online.policy`);
+  4. **swap** it into the serving index — ``install_artifact`` is a
+     single snapshot-pointer flip guarded by the same machinery as
+     compaction: readers pin a snapshot per batch, inserts that raced the
+     refit are re-placed under the new scorer inside the swap, stale
+     versions are rejected;
+  5. **age** the probe counters (``VectorCounter.decay``) so the next
+     cycle's hot-bucket view is a sliding window, and optionally persist
+     the artifact through a CheckpointManager (atomic write-rename).
+
+``run_cycle()`` is the synchronous unit (tests, benchmarks); ``start()``
+runs it on a daemon thread every ``interval_s`` seconds. Each cycle
+re-traces the fit round for the drained batch's shape — fine at refit
+cadence (seconds), not on any per-query path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.artifact import IndexArtifact, rebuild_members
+from repro.core import query as Q
+from repro.core.network import ScorerConfig
+from repro.fit.engine import FitData, FitEngine
+from repro.fit.state import FitState
+from repro.online.policy import build_replicas
+from repro.stream.delta import delta_init
+
+PROBE_COUNTER = "serve_bucket_probes"   # the server's [R·B] probe vector
+
+
+def _round_up(x: int, mult: int = 8) -> int:
+    return ((max(x, 1) + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass
+class RefitConfig:
+    """Knobs of one background refit loop (docs/online.md)."""
+    interval_s: float = 5.0        # background cadence of start()
+    rounds_per_cycle: int = 1      # fit rounds per drained traffic batch
+    epochs_per_round: int | None = None   # None -> the index cfg's value
+    min_queries: int = 32          # leave the log accumulating below this
+    counter_decay: float = 0.5     # probe-counter aging per cycle (1 = off)
+    hot_frac: float = 0.0          # >0 enables hot-bucket replication
+    replica_len: int = 8           # replica segment length [R, B, RL]
+    probe_mass: float = 0.9        # m(q) telemetry target mass
+    telemetry_m: int = 5           # probe budget the m(q) gauge is over
+    persist: bool = False          # save each artifact via the manager
+    seed: int = 0
+
+
+def make_refit_round(cfg, *, params, assign, x, label_ids, label_mask,
+                     label_vecs, rng, rounds: int,
+                     epochs_per_round: int | None = None):
+    """(engine, data, state) for incremental rounds over a traffic batch.
+
+    The SAME construction the ``online.refit_round_no_dense_affinity``
+    contract fixture audits: ``cfg`` is the serving index's IRLIConfig
+    re-anchored at ``n_labels = len(label_vecs)`` (the live corpus is the
+    label set), and the engine's compiled round streams the query->bucket
+    affinity in label chunks — never a dense [L, B] table.
+    """
+    L = int(label_vecs.shape[0])
+    rcfg = dataclasses.replace(
+        cfg, n_labels=L, rounds=int(rounds),
+        epochs_per_round=int(epochs_per_round if epochs_per_round is not None
+                             else cfg.epochs_per_round),
+        affinity_chunk=min(cfg.affinity_chunk, L))
+    scfg = ScorerConfig(d_in=rcfg.d, d_hidden=rcfg.d_hidden,
+                        n_buckets=rcfg.n_buckets, n_reps=rcfg.n_reps,
+                        loss=rcfg.loss)
+    data = FitData.build(x, label_ids, label_mask, label_vecs=label_vecs,
+                         n_labels=L, chunk=rcfg.affinity_chunk)
+    engine = FitEngine(rcfg, scfg)
+    # donate COPIES: the round donates its state; the serving snapshot's
+    # live params must survive a refit that dies mid-cycle
+    params = jax.tree.map(jnp.copy, params)
+    state = FitState.create(params, engine.opt.init(params),
+                            jnp.asarray(assign, jnp.int32), rng)
+    return engine, data, state
+
+
+class OnlineRefitLoop:
+    """Background driver re-partitioning a MutableIRLIIndex against its
+    own serve traffic. Single-writer: at most one cycle runs at a time
+    (``run_cycle`` is not re-entrant; the daemon thread serializes them).
+    Mutations and searches keep flowing throughout — the only serialized
+    moment is ``install_artifact``'s pointer flip."""
+
+    def __init__(self, index, qlog: "obs.QueryLog", *,
+                 config: RefitConfig | None = None, registry=None,
+                 manager=None, mesh=None):
+        self.index = index
+        self.qlog = qlog
+        self.config = config if config is not None else RefitConfig()
+        # share the SERVER's registry so the loop sees serve_bucket_probes
+        self.registry = obs.get_registry(registry)
+        self.manager = manager
+        self.mesh = mesh
+        self._round_counter = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- cycle --
+    def run_cycle(self) -> IndexArtifact | None:
+        """One synchronous refit cycle; returns the installed artifact, or
+        None when the query log has not accumulated ``min_queries`` yet."""
+        rc = self.config
+        reg = self.registry
+        if len(self.qlog) < rc.min_queries:
+            reg.counter("refit_cycles_skipped_total").inc()
+            return None
+        t0 = time.perf_counter()
+        x, ids = self.qlog.drain()
+        midx = self.index
+        s = midx.snapshot               # ONE read: the cycle's base state
+        n = int(s.n_total)
+        B = midx.cfg.n_buckets
+        tomb = np.asarray(s.tombstone)
+        # served ids self-label the traffic; -1 pads, out-of-range rows
+        # (an id from an older epoch) and tombstoned targets drop out
+        cids = np.clip(ids, 0, n - 1).astype(np.int32)
+        mask = ((ids >= 0) & (ids < n)
+                & ~tomb[cids]).astype(np.float32)
+        engine, data, state = make_refit_round(
+            midx.cfg, params=s.params,
+            # dead/unused sentinel B is out of the scorer's range; the fit
+            # re-derives every assignment anyway, so clamp for the round
+            assign=np.minimum(np.asarray(s.assign[:, :n]), B - 1),
+            x=x, label_ids=cids, label_mask=mask, label_vecs=s.vecs[:n],
+            rng=jax.random.PRNGKey(rc.seed + self._round_counter),
+            rounds=rc.rounds_per_cycle,
+            epochs_per_round=rc.epochs_per_round)
+        if self.mesh is None:
+            round_fn = engine.make_fit_round(data)
+        else:
+            round_fn = engine.make_sharded_fit_round(self.mesh, data, state)
+        nq = int(x.shape[0])
+        t_fit = time.perf_counter()
+        for _ in range(rc.rounds_per_cycle):
+            idx_b, w = engine.round_batches(nq, rc.seed, self._round_counter)
+            self._round_counter += 1
+            state, met = round_fn(state, idx_b, w)
+            reg.counter("refit_rounds_total").inc()
+            reg.gauge("refit_loss").set(float(met["loss"]))
+            reg.gauge("refit_n_reassigned").set(int(met["n_reassigned"]))
+        reg.histogram("refit_fit_seconds").observe(
+            time.perf_counter() - t_fit)
+
+        art = self._build_artifact(state, s, n)
+        try:
+            midx.install_artifact(art)
+        except ValueError:
+            # the epoch moved while we fit (a compaction, a concurrent
+            # install): same content, re-versioned past the new epoch
+            art = art.with_version(midx.epoch + 1)
+            midx.install_artifact(art)
+        # age the probe window AFTER replica building consumed this cycle's
+        # counts; next cycle sees a sliding, recency-weighted view
+        R = midx.cfg.n_reps
+        if rc.counter_decay < 1.0:
+            reg.vector(PROBE_COUNTER, R * B).decay(rc.counter_decay)
+        if rc.persist and self.manager is not None:
+            art.save(self.manager)
+        # m(q) telemetry: what the LIRA-style adaptive policy would probe
+        # for this cycle's traffic under the NEW scorer
+        pm = Q.predicted_probe_counts(
+            state.params, jnp.asarray(x[: min(nq, 256)]),
+            m=rc.telemetry_m, probe_mass=rc.probe_mass)
+        reg.gauge("refit_predicted_m_mean").set(float(jnp.mean(
+            pm.astype(jnp.float32))))
+        reg.counter("refit_cycles_total").inc()
+        reg.counter("refit_queries_total").inc(nq)
+        reg.gauge("refit_artifact_version").set(int(art.version))
+        reg.histogram("refit_cycle_seconds").observe(
+            time.perf_counter() - t0)
+        return art
+
+    def _build_artifact(self, state: FitState, s, n: int) -> IndexArtifact:
+        """Seal the fit result + carried payload as the next artifact."""
+        rc = self.config
+        midx = self.index
+        cfg = midx.cfg
+        B, R = cfg.n_buckets, cfg.n_reps
+        tomb_n = np.asarray(s.tombstone)[:n]
+        new_assign = np.where(tomb_n[None, :], B,
+                              np.asarray(state.assign))     # [R, n]
+        cap_assign = np.asarray(s.assign).copy()
+        cap_assign[:, :n] = new_assign
+        live_max = max(
+            int(np.bincount(new_assign[r][new_assign[r] < B],
+                            minlength=B).max()) for r in range(R))
+        # keep the member-matrix shape stable when possible: a constant
+        # shape keeps the serving pipeline's jit cache warm across swaps
+        max_load = max(int(s.members.shape[-1]), _round_up(live_max, 8))
+        cap_assign = jnp.asarray(cap_assign, jnp.int32)
+        members, load = rebuild_members(cap_assign, s.tombstone,
+                                        B=B, max_load=max_load)
+        replicas = None
+        if rc.hot_frac > 0.0:
+            counts = self.registry.vector(PROBE_COUNTER, R * B).value
+            replicas = build_replicas(
+                state.params, s.vecs, members, s.tombstone, counts,
+                hot_frac=rc.hot_frac, replica_len=rc.replica_len)
+        tmp = dataclasses.replace(
+            s, params=state.params, members=members, load=load,
+            assign=cap_assign,
+            delta=delta_init(R, B, int(s.delta.members.shape[-1])),
+            replicas=replicas)
+        return IndexArtifact.from_snapshot(
+            tmp, cfg, version=midx.epoch + 1, capacity=midx.capacity,
+            store_block=midx.store_block, n_base=midx.n_base)
+
+    # -------------------------------------------------------- background --
+    def start(self) -> None:
+        """Run ``run_cycle`` every ``interval_s`` s on a daemon thread."""
+        if self._thread is not None:
+            raise RuntimeError("OnlineRefitLoop already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.config.interval_s):
+            try:
+                self.run_cycle()
+            except Exception as e:   # noqa: BLE001 — loop must survive
+                self.registry.counter("refit_errors_total").inc()
+                warnings.warn(f"online refit cycle failed: {e!r}")
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=60)
+            self._thread = None
+
+
+# ------------------------------------------------------- static contracts --
+# ISSUE acceptance: the refit round must stay [.., L, B]-free (the live
+# corpus can be 100M rows) and the swap's device work must never copy the
+# [capacity, d] payload. Fixtures live in analysis/fixtures.py.
+from repro.analysis import contracts as _C
+
+
+def _refit_round_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.online_refit_round()
+
+
+def _refit_dense_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.online_refit_dense_control()
+
+
+def _swap_fixture():
+    from repro.analysis import fixtures as _FX
+    return _FX.online_swap_no_copy()
+
+
+def _swap_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.online_swap_copy_control()
+
+
+_C.register(_C.Contract(
+    id="online.refit_round_no_dense_affinity",
+    site="repro.online.refit.make_refit_round",
+    description="the incremental refit round over drained serve traffic "
+                "streams query->bucket affinity in label chunks — it never "
+                "materializes [.., L, B] even though the label set is the "
+                "live corpus; the seed-style dense re-partition is the "
+                "control",
+    fixture=_refit_round_fixture,
+    checks=[
+        _C.forbid_dims("L", "B"),
+        _C.require_dims("chunk", "B"),
+        _C.require_dims("L", "K"),
+    ],
+    control=_refit_dense_control,
+))
+
+_C.register(_C.Contract(
+    id="online.swap_no_index_copy",
+    site="repro.stream.mutable_index.MutableIRLIIndex.install_artifact",
+    description="the swap's only device work (member-matrix rebuild) "
+                "never materializes a [capacity, d] copy of the vector "
+                "payload and stays under a small intermediate budget — "
+                "vecs/codes move between artifact and snapshot by "
+                "reference; a variant that touches the payload is the "
+                "control",
+    fixture=_swap_fixture,
+    checks=[
+        _C.forbid_dims("cap", "d"),
+        _C.require_dims("cap"),
+        _C.max_intermediate_bytes(1 << 19),
+    ],
+    control=_swap_control,
+))

@@ -87,6 +87,7 @@ class IRLIServer:
                  base=None, cache: PipelineCache | None = None,
                  registry: "obs.MetricRegistry | None" = None,
                  staged: bool = False, probe_stats: bool = True,
+                 qlog: "obs.QueryLog | None" = None,
                  m=None, tau=None, k=None, metric=None, mode=None, topC=None):
         legacy = (params is None
                   and any(v is not None
@@ -123,6 +124,10 @@ class IRLIServer:
         self._mutable = hasattr(index, "insert") and hasattr(index, "delete")
         self._searcher = self._bind_searcher()
         self._probe = self._bind_probe() if probe_stats else None
+        # sampled query stream for the online refit loop (docs/online.md):
+        # every served batch logs (query, result ids) pairs the
+        # OnlineRefitLoop later drains as incremental training data
+        self.qlog = qlog
         self.q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self.registry.gauge("serve_epoch").set(getattr(index, "epoch", 0))
@@ -284,6 +289,8 @@ class IRLIServer:
                 reg.histogram("serve_candidates",
                               bounds=obs.COUNT_BUCKETS).observe_many(
                                   n_cand[:n])
+                if self.qlog is not None:   # pad rows sliced off first
+                    self.qlog.record(queries[:n], ids[:n])
                 if self._legacy_results:
                     out = [ids[i] for i in range(n)]
                 else:

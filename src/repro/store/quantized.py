@@ -197,3 +197,37 @@ def refine_rows(store: QuantizedStore, ids) -> jnp.ndarray:
     if store.exact is not None:
         return store.exact[ids]
     return dequant_rows(store, ids)
+
+
+# ------------------------------------------------------------ serialization --
+def store_to_arrays(store: QuantizedStore | None, prefix: str = "store_"
+                    ) -> dict:
+    """Flatten a store into npz-safe arrays: ``{prefix}codes`` (+
+    ``{prefix}scales`` for int8). bf16 codes are widened to fp32 — npz has
+    no bf16 — which is exact; :func:`store_from_arrays` re-casts. The exact
+    tier is NOT serialized: every owner (streaming index, IndexArtifact)
+    keeps its fp32 buffer as a separate leaf and re-links it on restore.
+    One codec shared by mutable-index checkpoints and the versioned
+    IndexArtifact so their on-disk layouts can never drift."""
+    if store is None:
+        return {}
+    out = {prefix + "codes": (store.codes if store.codes.dtype == jnp.int8
+                              else store.codes.astype(jnp.float32))}
+    if store.scales is not None:
+        out[prefix + "scales"] = store.scales
+    return out
+
+
+def store_from_arrays(arrays: dict, dtype: str, block: int,
+                      prefix: str = "store_") -> QuantizedStore | None:
+    """Inverse of :func:`store_to_arrays`: rebuild the store (or None when
+    the arrays carry no ``{prefix}codes``)."""
+    if prefix + "codes" not in arrays:
+        return None
+    _check_dtype(dtype)
+    codes = jnp.asarray(arrays[prefix + "codes"])
+    if dtype == "bf16":                   # widened to fp32 on disk
+        codes = codes.astype(jnp.bfloat16)
+    scales = (jnp.asarray(arrays[prefix + "scales"], jnp.float32)
+              if prefix + "scales" in arrays else None)
+    return QuantizedStore(dtype, int(block), codes, scales)

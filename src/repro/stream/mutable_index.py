@@ -63,6 +63,15 @@ class StreamSnapshot:
     #                          it from vecs, searches with
     #                          store_dtype != "fp32" rerank on its codes
     #                          with vecs as the exact fp32 refine tier
+    replicas: jnp.ndarray | None = None      # [R, B, RL] int32 hot-bucket
+    #                          replica segments (repro.online.policy, pad
+    #                          -1): copies of hot buckets' members filed
+    #                          under each member's next-best bucket, gathered
+    #                          like delta members when
+    #                          SearchParams.hot_replicas=True. Shadow copies
+    #                          only — load accounting and compaction track
+    #                          primary placements; a replicated-then-deleted
+    #                          id is masked by the same tombstone pass.
 
 
 @partial(jax.jit, static_argnames=("B", "K", "loss_kind"))
@@ -140,6 +149,9 @@ class MutableIRLIIndex:
             self._snapshot = compaction.compact_snapshot(self._snapshot, B)
             self._snapshot = dataclasses.replace(self._snapshot, epoch=0)
         self._mu = threading.RLock()
+        # memo of (delta.members, replicas) -> their concatenation, so the
+        # hot-replica gather array is built once per snapshot, not per query
+        self._replica_memo = None
 
     # ------------------------------------------------------------ reading --
     @property
@@ -212,8 +224,20 @@ class MutableIRLIIndex:
             # fp32 buffer doubles as the exact refine tier: coarse scoring
             # gathers code rows, the k' survivors re-score at full precision
             base = dataclasses.replace(s.store, exact=s.vecs)
+        delta_members = s.delta.members
+        if params.hot_replicas and s.replicas is not None:
+            # replica segments ride the delta gather: concat once per
+            # (delta, replicas) pair (memoized by identity — both arrays
+            # are immutable, every mutation swaps in new ones)
+            memo = self._replica_memo
+            if memo is None or memo[0] is not delta_members \
+                    or memo[1] is not s.replicas:
+                memo = (delta_members, s.replicas, jnp.concatenate(
+                    [delta_members, s.replicas], axis=-1))
+                self._replica_memo = memo
+            delta_members = memo[2]
         return cache.search(params, s.params, s.members, base,
-                            jnp.asarray(queries), s.delta.members,
+                            jnp.asarray(queries), delta_members,
                             s.tombstone, epoch=s.epoch, staged=staged)
 
     def _record_state_gauges(self) -> None:
@@ -315,8 +339,11 @@ class MutableIRLIIndex:
                 return 0
             self.registry.counter("stream_deletes_total").inc(live_ids.size)
             # decrement live loads at each rep's bucket of the dying ids
+            # (the sentinel B marks rows no member list carries — e.g. an
+            # id served only through replica segments — nothing to decrement)
+            B = self.cfg.n_buckets
             a = np.asarray(s.assign[:, live_ids])                # [R, n]
-            dec = np.stack([np.bincount(a[r], minlength=self.cfg.n_buckets)
+            dec = np.stack([np.bincount(a[r][a[r] < B], minlength=B)
                             for r in range(a.shape[0])])
             self._snapshot = dataclasses.replace(
                 s,
@@ -344,6 +371,110 @@ class MutableIRLIIndex:
             self.registry.counter("stream_compactions_total").inc()
             self._record_state_gauges()
 
+    # ------------------------------------------------------------ refit swap --
+    def _check_artifact(self, artifact) -> None:
+        meta = artifact.meta_dict
+        expect = {"d": self.cfg.d, "n_buckets": self.cfg.n_buckets,
+                  "n_reps": self.cfg.n_reps, "capacity": self.capacity,
+                  "loss": self.cfg.loss}
+        for key, want in expect.items():
+            if key in meta and meta[key] != want:
+                raise ValueError(
+                    f"install_artifact: config mismatch on {key}: artifact "
+                    f"has {meta[key]!r}, this index has {want!r}")
+
+    def install_artifact(self, artifact) -> None:
+        """Zero-downtime swap: publish a refit artifact as the serving
+        snapshot. The swap itself is ONE attribute store — readers in
+        flight finish on the old snapshot, the next batch reads the new one
+        bit-consistently (``result.epoch`` == artifact.version names which).
+
+        The payload tiers (vecs, quantized codes) are taken from the
+        CURRENT snapshot by reference — a refit never touches vector
+        content, and rows inserted while it ran live only there. Those
+        tail rows (ids >= artifact.n_total) are re-placed under the NEW
+        scorer into fresh delta segments inside the same swap, so an
+        insert can never be lost to a concurrent refit; deletes that
+        post-date the artifact keep masking via the carried-over tombstone
+        (their load decrement is re-applied here).
+
+        Versions must advance: an artifact whose version does not exceed
+        the current epoch is stale (a slow refit publishing after a newer
+        one) and is rejected.
+        """
+        import time as _time
+        cfg = self.cfg
+        B = cfg.n_buckets
+        with self._mu:
+            cur = self._snapshot
+            self._check_artifact(artifact)
+            if artifact.version <= cur.epoch:
+                raise ValueError(
+                    f"install_artifact: stale artifact version "
+                    f"{artifact.version} <= serving epoch {cur.epoch}")
+            t0 = _time.perf_counter()
+            assign, load = artifact.assign, artifact.load
+            n_fit = artifact.n_total
+            # deletes issued after the artifact was built: results stay
+            # exact via the carried-over tombstone; re-apply their load
+            # decrements so future placements stay balanced
+            cur_tomb = np.asarray(cur.tombstone)
+            dead_new = cur_tomb[:n_fit] & \
+                ~np.asarray(artifact.tombstone)[:n_fit]
+            if dead_new.any():
+                a = np.asarray(assign[:, :n_fit])[:, dead_new]      # [R, nd]
+                dec = np.stack([np.bincount(a[r][a[r] < B], minlength=B)
+                                for r in range(a.shape[0])])
+                load = load - jnp.asarray(dec, jnp.int32)
+            snap = StreamSnapshot(
+                params=artifact.params, members=artifact.members,
+                delta=artifact.empty_delta(), tombstone=cur.tombstone,
+                load=load, assign=assign, vecs=cur.vecs,
+                n_total=cur.n_total, epoch=artifact.version,
+                store=cur.store, replicas=artifact.replicas)
+            live_tail = np.flatnonzero(
+                ~cur_tomb[n_fit:cur.n_total]) + n_fit
+            if live_tail.size:
+                snap = self._place_tail(snap, live_tail.astype(np.int32))
+            sp_arrays = [snap.load]
+            if live_tail.size:
+                sp_arrays.append(snap.delta.members)
+            jax.block_until_ready(sp_arrays)    # honest swap-pause timing
+            self._snapshot = snap
+            self.registry.histogram("stream_swap_seconds").observe(
+                _time.perf_counter() - t0)
+            self.registry.counter("stream_swaps_total").inc()
+            self.registry.gauge("artifact_version").set(artifact.version)
+            self._record_state_gauges()
+
+    def _place_tail(self, snap: StreamSnapshot, ids: np.ndarray
+                    ) -> StreamSnapshot:
+        """Re-place live rows the artifact has never seen (inserted during
+        the refit) under the artifact's NEW scorer — power-of-K against the
+        new loads, appended to the fresh delta. Falls back to an immediate
+        compaction when the tail alone would overflow a delta segment."""
+        cfg = self.cfg
+        n = ids.size
+        n_pad = 1 << max(0, (n - 1).bit_length())
+        vj = snap.vecs[jnp.asarray(np.concatenate(
+            [ids, np.zeros(n_pad - n, np.int32)]))]
+        valid = jnp.arange(n_pad) < n
+        buckets = _score_and_place(
+            snap.params, snap.load.astype(jnp.float32), vj, valid,
+            B=cfg.n_buckets, K=cfg.K, loss_kind=cfg.loss)[:, :n]
+        jids = jnp.asarray(ids)
+        new_delta, ok = delta_append(snap.delta, buckets, jids)
+        dload = jax.vmap(
+            lambda b: jnp.bincount(b, length=cfg.n_buckets))(buckets)
+        snap = dataclasses.replace(
+            snap, load=snap.load + dload.astype(jnp.int32),
+            assign=snap.assign.at[:, jids].set(buckets))
+        if bool(ok):
+            return dataclasses.replace(snap, delta=new_delta)
+        # assign already carries the tail: fold everything into the base
+        # members (epoch bumps past the artifact version — still monotone)
+        return compaction.compact_snapshot(snap, cfg.n_buckets)
+
     # ------------------------------------------------------- checkpointing --
     def state_dict(self, snapshot: StreamSnapshot | None = None) -> dict:
         """Arrays of the full mutable state, nested for CheckpointManager.
@@ -355,12 +486,9 @@ class MutableIRLIIndex:
             "delta_fill": s.delta.fill, "tombstone": s.tombstone,
             "load": s.load, "assign": s.assign, "vecs": s.vecs,
         }
-        if s.store is not None:
-            codes = s.store.codes
-            stream["store_codes"] = (codes if codes.dtype == jnp.int8
-                                     else codes.astype(jnp.float32))
-            if s.store.scales is not None:
-                stream["store_scales"] = s.store.scales
+        stream.update(ST.store_to_arrays(s.store))
+        if s.replicas is not None:
+            stream["replicas"] = s.replicas
         return {"scorer": s.params, "stream": stream}
 
     def meta(self, snapshot: StreamSnapshot | None = None) -> dict:
@@ -395,18 +523,10 @@ class MutableIRLIIndex:
                 raise ValueError(
                     f"checkpoint config mismatch: {key}={extra[key]!r}, "
                     f"this index has {want!r}")
-        store = None
-        if "store_codes" in st:
-            codes = jnp.asarray(st["store_codes"])
-            dtype = extra.get("store_dtype", self.store_dtype)
-            if dtype == "bf16":           # widened to fp32 in the npz
-                codes = codes.astype(jnp.bfloat16)
-            store = ST.QuantizedStore(
-                dtype, int(extra.get("store_block", self.store_block)),
-                codes,
-                (jnp.asarray(st["store_scales"], jnp.float32)
-                 if "store_scales" in st else None))
-        elif self.store_dtype != "fp32":
+        store = ST.store_from_arrays(
+            st, str(extra.get("store_dtype", self.store_dtype)),
+            int(extra.get("store_block", self.store_block)))
+        if store is None and self.store_dtype != "fp32":
             raise ValueError(
                 "checkpoint has no quantized store but this index was "
                 f"built with store_dtype={self.store_dtype!r}")
@@ -422,4 +542,6 @@ class MutableIRLIIndex:
                 assign=jnp.asarray(st["assign"], jnp.int32),
                 vecs=jnp.asarray(st["vecs"], jnp.float32),
                 n_total=int(extra["n_total"]), epoch=int(extra["epoch"]),
-                store=store)
+                store=store,
+                replicas=(jnp.asarray(st["replicas"], jnp.int32)
+                          if "replicas" in st else None))

@@ -274,3 +274,81 @@ def test_trajectory_registry_mirror_and_bad_lines(tmp_path):
     with open(path, "a") as f:
         f.write("not json at all\n{\"half\": 1\n")
     assert [r["name"] for r in tj.load(path)] == ["b/x"]
+
+
+# -------------------------------------------- decay / windowing / quantile --
+def test_vector_counter_decay_and_reset():
+    reg = obs.MetricRegistry()
+    v = reg.vector("probes", 4)
+    v.inc_at(np.array([0, 0, 1, 3]))
+    v.decay(0.5)
+    np.testing.assert_allclose(v.value, [1.0, 0.5, 0.0, 0.5])
+    with pytest.raises(ValueError, match="factor"):
+        v.decay(1.5)
+    with pytest.raises(ValueError, match="factor"):
+        v.decay(-0.1)
+    window = v.reset()
+    np.testing.assert_allclose(window, [1.0, 0.5, 0.0, 0.5])
+    np.testing.assert_allclose(v.value, np.zeros(4))
+
+
+def test_vector_counter_merge_decay_commute():
+    """Property (satellite spec): merge-then-decay == decay-then-merge.
+    Holds exactly because decay is a linear map and merge is addition —
+    float64 counts make factor=0.5 on integer counts exact."""
+    rng = np.random.default_rng(0)
+    for factor in (0.0, 0.25, 0.5, 1.0):
+        ra, rb = obs.MetricRegistry(), obs.MetricRegistry()
+        a, b = ra.vector("v", 16), rb.vector("v", 16)
+        a.inc_at(rng.integers(0, 16, 100))
+        b.inc_at(rng.integers(0, 16, 100))
+        # merge-then-decay (merge_snapshots adds vector counts)
+        merged = merge_snapshots(ra.snapshot(), rb.snapshot())
+        md = np.asarray(merged["v"]["counts"]) * factor
+        # decay-then-merge
+        a.decay(factor); b.decay(factor)
+        dm = merge_snapshots(ra.snapshot(), rb.snapshot())
+        np.testing.assert_allclose(md, np.asarray(dm["v"]["counts"]))
+
+
+def test_histogram_quantile():
+    h = Histogram(bounds=(1.0, 2.0, 4.0))
+    assert math.isnan(h.quantile(0.5))          # empty
+    for v in (0.5, 1.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    # median falls in the (1, 2] bucket; overflow reports the true max
+    assert 1.0 <= h.quantile(0.5) <= 2.0
+    assert h.quantile(1.0) == 100.0
+    assert h.quantile(0.0) <= 1.0
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    # p99 of a tight latency-like stream stays inside the right bucket
+    h2 = Histogram(bounds=LATENCY_BUCKETS)
+    h2.observe_many(np.full(1000, 3e-3))
+    q = h2.quantile(0.99)
+    lo = max(b for b in LATENCY_BUCKETS if b < 3e-3)
+    hi = min(b for b in LATENCY_BUCKETS if b >= 3e-3)
+    assert lo < q <= hi
+
+
+def test_query_log_sampling_and_drain():
+    reg = obs.MetricRegistry()
+    qlog = obs.QueryLog(capacity=8, sample=1.0, registry=reg)
+    assert len(qlog) == 0
+    x = np.arange(12, dtype=np.float32).reshape(6, 2)
+    ids = np.arange(18, dtype=np.int32).reshape(6, 3)
+    assert qlog.record(x, ids) == 6
+    assert len(qlog) == 6
+    # ring wraps: 6 more rows overwrite the 4 oldest
+    qlog.record(x + 100, ids + 100)
+    assert len(qlog) == 8
+    gx, gids = qlog.drain()
+    assert gx.shape == (8, 2) and gids.shape == (8, 3)
+    assert len(qlog) == 0 and qlog.drain()[0].shape == (0, 2)
+    # shape drift is an error, not silent corruption
+    qlog.record(x, ids)
+    with pytest.raises(ValueError):
+        qlog.record(np.zeros((2, 5), np.float32), ids[:2])
+    # sample=0 keeps nothing but still counts traffic
+    q2 = obs.QueryLog(capacity=8, sample=0.0, registry=obs.MetricRegistry())
+    assert q2.record(x, ids) == 0 and len(q2) == 0
