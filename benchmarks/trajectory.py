@@ -38,9 +38,16 @@ REGRESSION_FACTOR = 1.2
 #: and never gate
 _LATENCY_UNITS = ("us_per_call", "us", "ms", "s", "seconds")
 
-#: all gated units: latency plus the static-analysis peak-memory rows the
-#: audit CLI records (analysis_peak_bytes{contract=...}, unit "bytes") — a
-#: growing intermediate is a regression exactly like a growing latency
+#: units where LARGER is BETTER (quality-like): the gate direction inverts —
+#: the newest value regresses when it DROPS below median(prior)/factor. This
+#: is how audited-recall rows (benchmarks/bench_online.py, unit "recall")
+#: trip ``enforce`` exactly like a latency blowup would.
+_QUALITY_UNITS = ("recall", "frac")
+
+#: all gated larger-is-worse units: latency plus the static-analysis
+#: peak-memory rows the audit CLI records (analysis_peak_bytes{contract=...},
+#: unit "bytes") — a growing intermediate is a regression exactly like a
+#: growing latency
 _GATED_UNITS = _LATENCY_UNITS + ("bytes",)
 
 
@@ -108,26 +115,42 @@ def load(path: str | None = None) -> list:
 
 def check(path: str | None = None,
           factor: float = REGRESSION_FACTOR) -> list:
-    """Regression gate: for every gated-unit metric (latency-like or
-    "bytes") with >= 2 recordings, compare the NEWEST value against the
-    median of all PRIOR values. Returns a list of human-readable failure
-    strings (empty = pass).
+    """Regression gate: for every gated-unit metric with >= 2 recordings,
+    compare the NEWEST value against the median of all PRIOR values.
+    Returns a list of human-readable failure strings (empty = pass).
 
-    Median-of-priors (not just the previous run) keeps one historic noisy
-    sample from either masking or faking a regression."""
+    Direction follows the unit: latency-like/"bytes" rows regress when the
+    newest value EXCEEDS factor * median(prior); quality rows ("recall",
+    "frac" — larger is better) regress when it DROPS below
+    median(prior) / factor. Median-of-priors (not just the previous run)
+    keeps one historic noisy sample from either masking or faking a
+    regression."""
     by_name: dict = {}
     for row in load(path):
-        if row.get("unit") in _GATED_UNITS and row["value"] > 0:
-            by_name.setdefault(row["name"], []).append(row["value"])
+        unit = row.get("unit")
+        if unit in _GATED_UNITS and row["value"] > 0:
+            by_name.setdefault(row["name"], ("worse", []))[1].append(
+                row["value"])
+        elif unit in _QUALITY_UNITS and row["value"] >= 0:
+            # 0 is a legal (terrible) recall — it must still gate
+            by_name.setdefault(row["name"], ("better", []))[1].append(
+                row["value"])
     failures = []
-    for name, vals in sorted(by_name.items()):
+    for name, (direction, vals) in sorted(by_name.items()):
         if len(vals) < 2:
             continue
         baseline = statistics.median(vals[:-1])
-        if baseline > 0 and vals[-1] > factor * baseline:
+        if baseline <= 0:
+            continue
+        if direction == "worse" and vals[-1] > factor * baseline:
             failures.append(
                 f"{name}: {vals[-1]:.0f} vs median {baseline:.0f} "
                 f"({vals[-1] / baseline:.2f}x > {factor:.2f}x)")
+        elif direction == "better" and vals[-1] < baseline / factor:
+            failures.append(
+                f"{name}: {vals[-1]:.3f} vs median {baseline:.3f} "
+                f"({vals[-1] / baseline:.2f}x < 1/{factor:.2f}x — "
+                f"larger-is-better unit)")
     return failures
 
 

@@ -89,6 +89,20 @@ def local_search_compact(mode: str = "compact") -> Fixture:
                    dims={"Q": QL_Q, "L": QL_L, "C": QL_TOPC})
 
 
+def audit_oracle_control() -> Fixture:
+    """The shadow-audit oracle (``core.query.exact_topk``): a full-probe
+    scan that builds the [Q, L] table BY DESIGN — the tripping control for
+    ``query.audit_oracle_off_hot_path`` (proves forbid_dims("Q", "L") would
+    see the oracle if it ever leaked into the serve trace)."""
+    import jax.numpy as jnp
+    from repro.core.query import exact_topk
+    base, queries = _corpus(QL_L, QL_Q)
+    tomb = jnp.zeros((QL_L,), bool).at[:10].set(True)
+    fn = lambda b, q, t: exact_topk(q, b, t, k=K_TOP)
+    return Fixture(fn=fn, args=(base, queries, tomb),
+                   dims={"Q": QL_Q, "L": QL_L})
+
+
 # ------------------------------------------------------------------ store --
 def store_search(dtype: str) -> Fixture:
     """Quantized-store compact search — ``"int8"`` is the contract fixture

@@ -98,10 +98,15 @@ class IndexArtifact:
       replicas   optional [R, B, RL] int32 hot-bucket replica segments
                  (repro.online.policy; gathered like delta members when
                  SearchParams.hot_replicas=True)
+      sketch     optional [2^sketch_planes] fp32 reference query-sketch
+                 histogram (obs.quality.QuerySketch over the fit window);
+                 meta's ``sketch_planes``/``sketch_seed`` rebuild the
+                 identical hyperplanes, so the DriftDetector re-anchors on
+                 exactly the distribution this artifact was fitted to
 
     Static aux: version, n_total, meta (sorted (key, value) config pairs:
-    d/n_buckets/n_reps/capacity/loss/store_dtype/store_block/n_base),
-    checksum. The checksum certifies a SEALED artifact: constructors here
+    d/n_buckets/n_reps/capacity/loss/store_dtype/store_block/n_base and,
+    when a sketch ships, sketch_planes/sketch_seed), checksum. The checksum certifies a SEALED artifact: constructors here
     compute it; anything that transforms the leaves must re-seal
     (``reseal()``) before ``verify()`` can pass again.
     """
@@ -117,25 +122,26 @@ class IndexArtifact:
     meta: tuple
     store: ST.QuantizedStore | None = None
     replicas: jnp.ndarray | None = None
+    sketch: jnp.ndarray | None = None
     checksum: str = ""
 
     # ------------------------------------------------------------- pytree --
     def tree_flatten(self):
         children = (self.params, self.members, self.delta.members,
                     self.delta.fill, self.tombstone, self.load, self.assign,
-                    self.vecs, self.store, self.replicas)
+                    self.vecs, self.store, self.replicas, self.sketch)
         aux = (self.version, self.n_total, self.meta, self.checksum)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         (params, members, dmem, dfill, tomb, load, assign, vecs, store,
-         replicas) = children
+         replicas, sketch) = children
         return cls(version=aux[0], params=params, members=members,
                    delta=DeltaState(members=dmem, fill=dfill),
                    tombstone=tomb, load=load, assign=assign, vecs=vecs,
                    n_total=aux[1], meta=aux[2], store=store,
-                   replicas=replicas, checksum=aux[3])
+                   replicas=replicas, sketch=sketch, checksum=aux[3])
 
     # ------------------------------------------------------------ identity --
     @property
@@ -154,6 +160,8 @@ class IndexArtifact:
                 out.append(("store_scales", self.store.scales))
         if self.replicas is not None:
             out.append(("replicas", self.replicas))
+        if self.sketch is not None:
+            out.append(("sketch", self.sketch))
         return out
 
     def reseal(self) -> "IndexArtifact":
@@ -181,20 +189,23 @@ class IndexArtifact:
     @classmethod
     def build(cls, *, version: int, params, members, delta, tombstone, load,
               assign, vecs, n_total: int, meta: dict,
-              store=None, replicas=None) -> "IndexArtifact":
+              store=None, replicas=None, sketch=None) -> "IndexArtifact":
         """Seal a new artifact from parts (the OnlineRefitLoop's exit)."""
         art = cls(version=int(version), params=params, members=members,
                   delta=delta, tombstone=tombstone, load=load, assign=assign,
                   vecs=vecs, n_total=int(n_total),
                   meta=tuple(sorted(meta.items())), store=store,
-                  replicas=replicas)
+                  replicas=replicas, sketch=sketch)
         return art.reseal()
 
     @classmethod
     def from_snapshot(cls, snap, cfg, *, version: int, capacity: int,
                       store_block: int = 32, n_base: int | None = None,
-                      replicas=None) -> "IndexArtifact":
-        """Wrap a stream.StreamSnapshot (by reference — no copies)."""
+                      replicas=None, sketch=None, sketch_planes: int = 6,
+                      sketch_seed: int = 0) -> "IndexArtifact":
+        """Wrap a stream.StreamSnapshot (by reference — no copies).
+        ``sketch`` freezes the fit window's query-sketch histogram (plus
+        the plane-rebuilding ints) for downstream drift detection."""
         meta = {"d": cfg.d, "n_buckets": cfg.n_buckets, "n_reps": cfg.n_reps,
                 "capacity": int(capacity), "loss": cfg.loss,
                 "store_dtype": (snap.store.dtype if snap.store is not None
@@ -202,13 +213,17 @@ class IndexArtifact:
                 "store_block": (snap.store.block if snap.store is not None
                                 else store_block),
                 "n_base": int(n_base if n_base is not None else snap.n_total)}
+        if sketch is not None:
+            sketch = jnp.asarray(sketch, jnp.float32)
+            meta["sketch_planes"] = int(sketch_planes)
+            meta["sketch_seed"] = int(sketch_seed)
         return cls.build(
             version=version, params=snap.params, members=snap.members,
             delta=snap.delta, tombstone=snap.tombstone, load=snap.load,
             assign=snap.assign, vecs=snap.vecs, n_total=snap.n_total,
             meta=meta, store=snap.store,
             replicas=replicas if replicas is not None
-            else getattr(snap, "replicas", None))
+            else getattr(snap, "replicas", None), sketch=sketch)
 
     @classmethod
     def from_mutable(cls, midx, *, version: int | None = None
@@ -248,6 +263,8 @@ class IndexArtifact:
         arrays.update(ST.store_to_arrays(self.store))
         if self.replicas is not None:
             arrays["replicas"] = self.replicas
+        if self.sketch is not None:
+            arrays["sketch"] = self.sketch
         return {"scorer": self.params, "artifact": arrays}
 
     def extra(self) -> dict:
@@ -276,7 +293,8 @@ class IndexArtifact:
         extra = manifest.get("extra", {})
         arrays = tree["artifact"]
         meta_keys = ("d", "n_buckets", "n_reps", "capacity", "loss",
-                     "store_dtype", "store_block", "n_base")
+                     "store_dtype", "store_block", "n_base",
+                     "sketch_planes", "sketch_seed")
         meta = {k: extra[k] for k in meta_keys if k in extra}
         store = ST.store_from_arrays(
             arrays, str(extra.get("store_dtype", "fp32")),
@@ -296,6 +314,8 @@ class IndexArtifact:
             meta=tuple(sorted(meta.items())), store=store,
             replicas=(jnp.asarray(arrays["replicas"], jnp.int32)
                       if "replicas" in arrays else None),
+            sketch=(jnp.asarray(arrays["sketch"], jnp.float32)
+                    if "sketch" in arrays else None),
             checksum=str(extra.get("checksum", "")))
         art.verify()
         return art

@@ -248,6 +248,20 @@ def rerank(queries, base, cand_mask, k: int, metric: str = "angular"):
     return jnp.where(jnp.isfinite(scores), idx, -1)
 
 
+@partial(jax.jit, static_argnames=("k", "metric"))
+def exact_topk(queries, base, tombstone, *, k: int, metric: str = "angular"):
+    """Full-probe exact top-k over the fp32 tier — the shadow-audit oracle.
+
+    queries [Q, d], base [L, d], tombstone [L] bool -> ids [Q, k] (-1 where
+    fewer than k live rows exist). Deliberately builds the whole [Q, L]
+    similarity table rerank's masking avoids — this is the ground truth the
+    ShadowAuditor (repro.obs.quality) scores served ids against, and it
+    must only ever run off the hot path, on the sampled audit window
+    (contract ``query.audit_oracle_off_hot_path``).
+    """
+    return rerank(queries, base, ~tombstone[None, :], k, metric)
+
+
 # ------------------------------------------------------------ pipeline ------
 DENSE_TABLE_BUDGET_BYTES = 64 << 20   # default cap on the [Q, L] fp32 tables
 
@@ -627,4 +641,22 @@ _C.register(_C.Contract(
     fixture=_compact_streaming_fixture,
     checks=[_C.forbid_dims("Q", "L"), _C.require_dims("Q", "C")],
     control=_dense_control,
+))
+
+
+def _audit_oracle_control():
+    from repro.analysis import fixtures as _FX
+    return _FX.audit_oracle_control()
+
+
+_C.register(_C.Contract(
+    id="query.audit_oracle_off_hot_path",
+    site="repro.core.query.exact_topk (ShadowAuditor ground truth)",
+    description="the compiled serve pipeline contains no [Q, L] full-probe "
+                "table — the exact audit oracle runs strictly off the hot "
+                "path, on the sampled shadow window; the oracle's own trace "
+                "is the control that MUST build the table",
+    fixture=_compact_fixture,
+    checks=[_C.forbid_dims("Q", "L")],
+    control=_audit_oracle_control,
 ))

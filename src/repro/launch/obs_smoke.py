@@ -16,9 +16,14 @@ too), and asserts the registry snapshot is non-empty and contains:
   - online-refit series: query-log traffic counters, one background refit
     cycle's fit/cycle timings + loss, and the artifact-swap counters the
     zero-downtime install records (stream_swaps_total, artifact_version)
+  - live-quality series (docs/quality.md): a shadow-audit batch scored
+    against the exact oracle (quality_*), a FORCED drift spike that flips
+    ``/healthz`` to 503 and fires a drift-triggered refit cycle whose swap
+    re-anchors the detector and flips health back to 200 (drift_*, slo_*,
+    refit_trigger_total, refit_audited_recall_*)
 
-No HTTP port is opened — the point is that the registry itself is complete
-even with exposition off.
+The metrics surface itself is exercised registry-first (complete even with
+exposition off); only the /healthz flip opens an ephemeral loopback port.
 
     PYTHONPATH=src python -m repro.launch.obs_smoke
 """
@@ -120,14 +125,107 @@ def main():
     assert snap["serve_requests_total"]["value"] >= n_req
     probes = snap["serve_bucket_probes"]
     assert probes["sum"] > 0 and "kl_vs_uniform" in probes
-    # the exposition path must render the same registry
+    # the exposition path must render the same registry, including the
+    # derived le-bucket quantile series
     text = registry.to_text()
     assert "serve_requests_total" in text and "_bucket{" in text
+    assert 'quantile="0.99"' in text, "derived p99 missing from exposition"
+
+    # ---- quality: shadow audit, drift spike -> 503 -> refit -> 200 -------
+    import json
+    import urllib.request
+    from repro.obs.quality import (DriftDetector, QuerySketch, ShadowAuditor,
+                                   SLOMonitor, SLOSpec)
+
+    serve = SearchParams(m=4, tau=1, k=10, mode="compact")
+    sketch = QuerySketch(d=16, n_planes=6, seed=0)
+    drift = DriftDetector(sketch, reference=sketch.histogram(data.queries),
+                          registry=registry, min_count=8)
+    auditor = ShadowAuditor(
+        midx.exact_oracle(k=10), sample=1.0, registry=registry,
+        searcher=lambda q: np.asarray(midx.search(q, serve).ids))
+    monitor = SLOMonitor(SLOSpec(max_drift=0.5, trip_after=2, clear_after=1),
+                         registry=registry)
+    http = obs.start_metrics_server(registry, 0, host="127.0.0.1",
+                                    health=monitor.health,
+                                    status=lambda: {
+                                        "artifact_version": midx.epoch})
+
+    def healthz():
+        url = f"http://127.0.0.1:{http.server_address[1]}/healthz"
+        try:
+            with urllib.request.urlopen(url, timeout=30) as r:
+                return r.status, json.loads(r.read())
+        except urllib.error.HTTPError as e:
+            return e.code, json.loads(e.read())
+
+    try:
+        # one shadow-audit batch against the exact oracle
+        res = midx.search(data.queries, serve)
+        auditor.observe(np.asarray(data.queries, np.float32),
+                        np.asarray(res.ids), epoch=midx.epoch,
+                        latency_s=1e-3)
+        audit = auditor.run_audit()
+        assert audit is not None and 0.0 <= audit["live_recall"] <= 1.0
+        assert midx.epoch in audit["by_version"]
+
+        # healthy before the spike
+        monitor.evaluate()
+        code, body = healthz()
+        assert code == 200, f"pre-spike healthz {code}: {body}"
+
+        # forced drift spike: shifted/negated traffic, then two breaching
+        # evaluations (trip_after=2) -> critical -> 503
+        drifted = np.asarray(-data.queries + 2.0, np.float32)
+        qlog2 = obs.QueryLog(capacity=256, registry=registry)
+        for _ in range(4):
+            r2 = midx.search(drifted, serve)
+            drift.record(drifted)
+            qlog2.record(drifted, np.asarray(r2.ids), epoch=midx.epoch)
+        assert drift.score() > 0.5, "forced spike did not register"
+        monitor.evaluate(), monitor.evaluate()
+        code, body = healthz()
+        assert code == 503, f"spiked healthz {code}: {body}"
+        assert body["status"] == "critical"
+
+        # the drift trigger (not a cadence) fires a refit cycle; its swap
+        # freezes the drained window's sketch, re-anchors the detector,
+        # and health recovers
+        loop2 = OnlineRefitLoop(
+            midx, qlog2,
+            config=RefitConfig(interval_s=None, on_drift=0.5,
+                               min_queries=32, rounds_per_cycle=1),
+            registry=registry, auditor=auditor, drift=drift)
+        assert loop2.should_fire(0.0) == "drift"
+        art2 = loop2.run_cycle()
+        assert art2 is not None and art2.sketch is not None
+        assert drift.score() < 0.5, "swap did not re-anchor the detector"
+        monitor.evaluate()                           # clear_after=1
+        code, body = healthz()
+        assert code == 200, f"post-refit healthz {code}: {body}"
+    finally:
+        http.shutdown()
+
+    snap = registry.snapshot()
+    for key in ("quality_observed_total", "quality_sampled_total",
+                "quality_live_recall", "quality_recall",
+                "quality_audited_total", "quality_audits_total",
+                "query_drift_score", "drift_query_kl", "drift_chi_square",
+                "drift_window_total", "drift_scores_total",
+                'slo_state{slo="drift"}', 'slo_value{slo="drift"}',
+                'slo_breaches_total{slo="drift"}', "slo_health",
+                "slo_evaluations_total",
+                'refit_trigger_total{trigger="drift"}',
+                "refit_audited_recall_pre", "refit_audited_recall_post",
+                "refit_audited_recall_delta"):
+        assert key in snap, f"quality metric {key!r} missing: {sorted(snap)}"
+    assert snap['refit_trigger_total{trigger="drift"}']["value"] >= 1
 
     print(f"obs smoke OK: {len(snap)} series, "
           f"{len(stages)} stage histograms, "
           f"probe KL={probes['kl_vs_uniform']:.3f}, "
-          f"refit epoch={midx.epoch}")
+          f"refit epoch={midx.epoch}, "
+          f"live recall={audit['live_recall']:.2f}")
 
 
 if __name__ == "__main__":

@@ -7,13 +7,18 @@ run also exercises the server's params-grouped micro-batching.
 
     PYTHONPATH=src python -m repro.launch.serve [--requests 256] [--base 4096]
         [--metrics-port 9100] [--staged] [--metrics-log PATH.jsonl]
+        [--audit-sample 0.05] [--slo-p99-ms 50] [--slo-min-recall 0.5]
+        [--slo-max-drift 1.0]
 
 --metrics-port exposes the run's MetricRegistry over HTTP (GET /metrics for
-Prometheus text, /metrics.json for the raw snapshot) while serving;
---staged serves every request through the per-stage debug pipeline
-(bit-identical results, per-stage latency histograms); --metrics-log
-appends per-fit-round rows + a final registry snapshot as JSONL
-(docs/observability.md).
+Prometheus text, /metrics.json for the raw snapshot, /healthz + /statusz
+when SLOs are armed) while serving; --staged serves every request through
+the per-stage debug pipeline (bit-identical results, per-stage latency
+histograms); --metrics-log appends per-fit-round rows + a final registry
+snapshot as JSONL (docs/observability.md). --audit-sample arms the shadow
+auditor (exact-oracle live recall over that fraction of traffic) and the
+drift detector; the --slo-* thresholds arm the SLOMonitor whose health
+feeds /healthz (docs/quality.md).
 
 (The production 512-chip serving program is exercised by
 ``launch/dryrun.py --arch irli-deep1b --shape serve_query``.)
@@ -35,9 +40,20 @@ def main():
                     help="serve through the per-stage debug pipeline")
     ap.add_argument("--metrics-log", default="",
                     help="append fit rounds + final snapshot to this JSONL")
+    ap.add_argument("--audit-sample", type=float, default=0.0,
+                    help="shadow-audit sample rate (0 = auditing off)")
+    ap.add_argument("--slo-p99-ms", type=float, default=0.0,
+                    help="p99 serve-latency SLO in ms (0 = rule off)")
+    ap.add_argument("--slo-min-recall", type=float, default=0.0,
+                    help="min shadow-audited live recall (0 = rule off)")
+    ap.add_argument("--slo-max-drift", type=float, default=0.0,
+                    help="max query-drift KL score (0 = rule off)")
     args = ap.parse_args()
 
+    import jax.numpy as jnp
+
     from repro import obs
+    from repro.core import query as Q
     from repro.core.index import IRLIIndex, IRLIConfig
     from repro.core.search_api import SearchParams
     from repro.data.synthetic import clustered_ann
@@ -45,14 +61,42 @@ def main():
 
     registry = obs.MetricRegistry()
     mlog = obs.MetricsLogger(args.metrics_log) if args.metrics_log else None
-    http_srv = None
-    if args.metrics_port:
-        http_srv = obs.start_metrics_server(registry, args.metrics_port)
-        print(f"metrics on http://{http_srv.server_address[0]}:"
-              f"{http_srv.server_address[1]}/metrics")
 
     data = clustered_ann(n_base=args.base, n_queries=args.requests, d=16,
                          n_clusters=max(2, args.base // 20), seed=0)
+
+    # quality wiring (docs/quality.md): exact oracle over the frozen corpus,
+    # sampled shadow audits, drift vs the train-query sketch, SLO health
+    auditor = drift = monitor = None
+    if args.audit_sample > 0:
+        tomb = jnp.zeros((args.base,), bool)
+        base_dev = jnp.asarray(data.base, jnp.float32)
+        auditor = obs.ShadowAuditor(
+            lambda q: np.asarray(Q.exact_topk(
+                jnp.asarray(q, jnp.float32), base_dev, tomb, k=10)),
+            sample=args.audit_sample, registry=registry)
+        sketch = obs.QuerySketch(d=16, n_planes=6, seed=0)
+        drift = obs.DriftDetector(
+            sketch, reference=sketch.histogram(data.train_queries),
+            registry=registry)
+    slo = obs.SLOSpec(
+        p99_latency_s=args.slo_p99_ms / 1e3 if args.slo_p99_ms else None,
+        min_live_recall=args.slo_min_recall or None,
+        max_drift=args.slo_max_drift or None)
+    if any(v is not None for v in (slo.p99_latency_s, slo.min_live_recall,
+                                   slo.max_drift)):
+        monitor = obs.SLOMonitor(slo, registry=registry)
+
+    http_srv = None
+    if args.metrics_port:
+        http_srv = obs.start_metrics_server(
+            registry, args.metrics_port,
+            health=monitor.health if monitor is not None else None,
+            status=lambda: {"n_base": args.base,
+                            "audit_sample": args.audit_sample})
+        print(f"metrics on http://{http_srv.server_address[0]}:"
+              f"{http_srv.server_address[1]}/metrics")
+
     print(f"fitting index over {args.base} vectors ...")
     cfg = IRLIConfig(d=16, n_labels=args.base, n_buckets=64, n_reps=4,
                      d_hidden=96, K=10, rounds=args.rounds, epochs_per_round=3,
@@ -65,7 +109,8 @@ def main():
     wide = default.replace(m=8)           # per-request override: probe wider
     server = IRLIServer(idx, params=default, base=data.base,
                         max_batch=64, max_wait_ms=2.0,
-                        registry=registry, staged=args.staged)
+                        registry=registry, staged=args.staged,
+                        auditor=auditor, drift=drift)
     futs, lat = [], []
     t0 = time.time()
     for i in range(args.requests):
@@ -93,6 +138,17 @@ def main():
         stages = [k for k in snap if k.startswith("serve_stage_seconds")]
         print(f"staged: {len(stages)} stage histograms "
               f"({', '.join(sorted(stages))})")
+    if auditor is not None:
+        audit = auditor.run_audit()
+        score = drift.score()
+        if audit is not None:
+            print(f"shadow audit: live_recall={audit['live_recall']:.3f} "
+                  f"over {audit['n_audited']} sampled queries, "
+                  f"drift KL={score:.3f}")
+    if monitor is not None:
+        monitor.evaluate()
+        health = monitor.health()
+        print(f"slo health: {health['status']} {health['states']}")
     if mlog is not None:
         mlog.log_snapshot(registry)
         mlog.close()

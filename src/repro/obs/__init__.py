@@ -37,11 +37,22 @@ def get_registry(registry: "MetricRegistry | None" = None) -> MetricRegistry:
 
 # exposition imports http.server; keep it lazy-light but exported
 from repro.obs.exposition import start_metrics_server  # noqa: E402
+# quality resolves get_registry lazily, so import it after DEFAULT_REGISTRY
+from repro.obs.quality import (CRITICAL, OK, RECALL_BUCKETS,  # noqa: E402
+                               STATE_NAMES, WARN, DriftDetector,
+                               QuerySketch, ShadowAuditor, SLOMonitor,
+                               SLOSpec, chi_square, kl_divergence,
+                               recall_rows, uptime_source)
+from repro.obs.qlog import DrainedLog  # noqa: E402
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "VectorCounter", "MetricRegistry",
     "MetricsLogger", "Span", "trace", "fence", "log_buckets", "bucket_index",
     "merge_snapshots", "load_balance_stats", "LATENCY_BUCKETS",
     "COUNT_BUCKETS", "DEFAULT_REGISTRY", "get_registry",
-    "start_metrics_server", "QueryLog",
+    "start_metrics_server", "QueryLog", "DrainedLog",
+    # quality (docs/quality.md)
+    "RECALL_BUCKETS", "QuerySketch", "DriftDetector", "ShadowAuditor",
+    "SLOSpec", "SLOMonitor", "recall_rows", "kl_divergence", "chi_square",
+    "OK", "WARN", "CRITICAL", "STATE_NAMES", "uptime_source",
 ]

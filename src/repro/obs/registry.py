@@ -347,6 +347,14 @@ class MetricRegistry:
                labels: dict | None = None) -> VectorCounter:
         return self._get(name, labels, lambda: VectorCounter(size), "vector")
 
+    def get(self, name: str, labels: dict | None = None):
+        """The existing metric at (name, labels), or None — a READ that
+        never creates. Monitors (obs.quality.SLOMonitor) use this so
+        polling a signal that nothing has recorded yet stays "no data"
+        instead of materializing a zero-valued series."""
+        with self._lock:
+            return self._metrics.get((name, _labels_key(labels)))
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._metrics)
@@ -391,6 +399,15 @@ class MetricRegistry:
                     lines.append(f"{labeled('_bucket', extra)} {cum}")
                 lines.append(f"{labeled('_sum')} {s['sum']:g}")
                 lines.append(f"{labeled('_count')} {s['count']}")
+                # derived p50/p95/p99 (summary-style quantile label):
+                # interpolated from the SAME cumulative le-buckets above, so
+                # a scraper's own histogram_quantile() and these lines can
+                # only disagree by in-bucket interpolation
+                if s["count"] > 0:
+                    for q in (0.5, 0.95, 0.99):
+                        extra = 'quantile="%g"' % q
+                        lines.append(
+                            f"{labeled('', extra)} {m.quantile(q):g}")
             else:   # vector: expose the summary, not B raw series
                 s = m.snapshot()
                 for stat in ("sum", "min", "max", "std", "kl_vs_uniform"):

@@ -31,9 +31,18 @@ samples (query, served ids) pairs. One refit cycle:
      the artifact through a CheckpointManager (atomic write-rename).
 
 ``run_cycle()`` is the synchronous unit (tests, benchmarks); ``start()``
-runs it on a daemon thread every ``interval_s`` seconds. Each cycle
-re-traces the fit round for the drained batch's shape — fine at refit
-cadence (seconds), not on any per-query path.
+runs it on a daemon thread. The trigger policy (docs/quality.md) decides
+WHEN: the classic fixed cadence (``interval_s``), and/or quality signals —
+``on_drift`` fires when the DriftDetector's live-vs-reference KL crosses a
+threshold, ``on_recall_alert`` when the SLOMonitor's ``live_recall`` rule
+goes critical — so re-partitioning happens when the query distribution
+actually moved, not on a blind clock. Each cycle also: freezes the drained
+window's query sketch into the sealed artifact (the NEXT reference), re-
+anchors the DriftDetector on it after the swap, and reports its own
+effectiveness as the shadow-audited recall delta across the version swap
+(``refit_audited_recall_pre``/``_post``/``_delta``). Each cycle re-traces
+the fit round for the drained batch's shape — fine at refit cadence
+(seconds), not on any per-query path.
 """
 from __future__ import annotations
 
@@ -64,8 +73,15 @@ def _round_up(x: int, mult: int = 8) -> int:
 
 @dataclasses.dataclass
 class RefitConfig:
-    """Knobs of one background refit loop (docs/online.md)."""
-    interval_s: float = 5.0        # background cadence of start()
+    """Knobs of one background refit loop (docs/online.md).
+
+    Trigger policy (docs/quality.md): ``interval_s`` is the classic fixed
+    cadence (None disables it); ``on_drift`` fires a cycle as soon as the
+    wired DriftDetector's KL score exceeds the threshold; ``on_recall_alert``
+    fires when the wired SLOMonitor's ``live_recall`` rule is critical.
+    With any quality trigger armed the loop polls at ``poll_s`` instead of
+    sleeping a whole interval."""
+    interval_s: float | None = 5.0  # fixed cadence (None = triggers only)
     rounds_per_cycle: int = 1      # fit rounds per drained traffic batch
     epochs_per_round: int | None = None   # None -> the index cfg's value
     min_queries: int = 32          # leave the log accumulating below this
@@ -76,6 +92,12 @@ class RefitConfig:
     telemetry_m: int = 5           # probe budget the m(q) gauge is over
     persist: bool = False          # save each artifact via the manager
     seed: int = 0
+    on_drift: float | None = None  # KL threshold firing a cycle (needs drift)
+    on_recall_alert: bool = False  # fire on critical live_recall (needs monitor)
+    poll_s: float = 0.5            # trigger-poll period when quality-armed
+    audit_queries: int = 128       # swap-delta audit window (needs auditor)
+    sketch_planes: int = 6         # frozen-reference sketch (no drift wired)
+    sketch_seed: int = 0
 
 
 def make_refit_round(cfg, *, params, assign, x, label_ids, label_mask,
@@ -118,7 +140,8 @@ class OnlineRefitLoop:
 
     def __init__(self, index, qlog: "obs.QueryLog", *,
                  config: RefitConfig | None = None, registry=None,
-                 manager=None, mesh=None):
+                 manager=None, mesh=None, auditor=None, drift=None,
+                 monitor=None):
         self.index = index
         self.qlog = qlog
         self.config = config if config is not None else RefitConfig()
@@ -126,9 +149,38 @@ class OnlineRefitLoop:
         self.registry = obs.get_registry(registry)
         self.manager = manager
         self.mesh = mesh
+        # quality wiring (all optional; docs/quality.md): the ShadowAuditor
+        # scores the swap delta, the DriftDetector arms on_drift and gets
+        # re-anchored on each new artifact's sketch, the SLOMonitor arms
+        # on_recall_alert
+        self.auditor = auditor
+        self.drift = drift
+        self.monitor = monitor
         self._round_counter = 0
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+
+    # ----------------------------------------------------------- triggers --
+    def should_fire(self, elapsed_s: float) -> str | None:
+        """The trigger policy: why a cycle should run NOW, or None.
+        Quality triggers outrank the clock — a drift spike must not wait
+        out the cadence (and must fire even with ``interval_s=None``)."""
+        rc = self.config
+        trigger = None
+        if rc.on_drift is not None and self.drift is not None:
+            if self.drift.score() > rc.on_drift:
+                trigger = "drift"
+        if trigger is None and rc.on_recall_alert and self.monitor is not None:
+            from repro.obs.quality import CRITICAL
+            if self.monitor.state.get("live_recall", 0) >= CRITICAL:
+                trigger = "recall"
+        if trigger is None and rc.interval_s is not None \
+                and elapsed_s >= rc.interval_s * 0.999:
+            trigger = "interval"
+        if trigger is not None:
+            self.registry.counter("refit_trigger_total",
+                                  {"trigger": trigger}).inc()
+        return trigger
 
     # ------------------------------------------------------------- cycle --
     def run_cycle(self) -> IndexArtifact | None:
@@ -141,6 +193,16 @@ class OnlineRefitLoop:
             return None
         t0 = time.perf_counter()
         x, ids = self.qlog.drain()
+        # swap-delta audit (docs/quality.md): replay a slice of the drained
+        # window through the SERVE path now and again after the install, and
+        # score both against the exact oracle — the cycle's effectiveness
+        aud = self.auditor if (self.auditor is not None
+                               and self.auditor.searcher is not None) else None
+        xs = pre = None
+        if aud is not None and x.shape[0]:
+            xs = np.asarray(x[: min(int(x.shape[0]), rc.audit_queries)],
+                            np.float32)
+            pre = aud.recall_of(xs, aud.searcher(xs))
         midx = self.index
         s = midx.snapshot               # ONE read: the cycle's base state
         n = int(s.n_total)
@@ -176,7 +238,7 @@ class OnlineRefitLoop:
         reg.histogram("refit_fit_seconds").observe(
             time.perf_counter() - t_fit)
 
-        art = self._build_artifact(state, s, n)
+        art = self._build_artifact(state, s, n, sketch_hist=self._sketch(x))
         try:
             midx.install_artifact(art)
         except ValueError:
@@ -184,6 +246,17 @@ class OnlineRefitLoop:
             # install): same content, re-versioned past the new epoch
             art = art.with_version(midx.epoch + 1)
             midx.install_artifact(art)
+        if self.drift is not None and art.sketch is not None:
+            # re-anchor drift on the distribution this artifact was fitted
+            # to; clearing the live window makes recovery visible at the
+            # next score
+            self.drift.set_reference(np.asarray(art.sketch))
+            self.drift.reset_window()
+        if xs is not None:
+            post = aud.recall_of(xs, aud.searcher(xs))
+            reg.gauge("refit_audited_recall_pre").set(pre)
+            reg.gauge("refit_audited_recall_post").set(post)
+            reg.gauge("refit_audited_recall_delta").set(post - pre)
         # age the probe window AFTER replica building consumed this cycle's
         # counts; next cycle sees a sliding, recency-weighted view
         R = midx.cfg.n_reps
@@ -205,7 +278,24 @@ class OnlineRefitLoop:
             time.perf_counter() - t0)
         return art
 
-    def _build_artifact(self, state: FitState, s, n: int) -> IndexArtifact:
+    def _sketch(self, x):
+        """The drained window's query-sketch histogram (frozen into the
+        sealed artifact as the NEXT drift reference), or None on an empty
+        window. Uses the wired DriftDetector's sketch so reference and live
+        scoring share identical hyperplanes."""
+        if x.shape[0] == 0:
+            return None
+        rc = self.config
+        if self.drift is not None:
+            sk = self.drift.sketch
+        else:
+            from repro.obs.quality import QuerySketch
+            sk = QuerySketch(int(x.shape[1]), rc.sketch_planes,
+                             rc.sketch_seed)
+        return sk, sk.histogram(x)
+
+    def _build_artifact(self, state: FitState, s, n: int,
+                        sketch_hist=None) -> IndexArtifact:
         """Seal the fit result + carried payload as the next artifact."""
         rc = self.config
         midx = self.index
@@ -236,13 +326,20 @@ class OnlineRefitLoop:
             assign=cap_assign,
             delta=delta_init(R, B, int(s.delta.members.shape[-1])),
             replicas=replicas)
+        sk, hist = sketch_hist if sketch_hist is not None else (None, None)
         return IndexArtifact.from_snapshot(
             tmp, cfg, version=midx.epoch + 1, capacity=midx.capacity,
-            store_block=midx.store_block, n_base=midx.n_base)
+            store_block=midx.store_block, n_base=midx.n_base,
+            sketch=hist,
+            sketch_planes=sk.n_planes if sk is not None else 0,
+            sketch_seed=sk.seed if sk is not None else 0)
 
     # -------------------------------------------------------- background --
     def start(self) -> None:
-        """Run ``run_cycle`` every ``interval_s`` s on a daemon thread."""
+        """Run the trigger policy on a daemon thread: poll ``should_fire``
+        and run a cycle whenever it names a trigger (with no quality
+        trigger armed this degrades to the classic every-``interval_s``
+        cadence)."""
         if self._thread is not None:
             raise RuntimeError("OnlineRefitLoop already started")
         self._stop.clear()
@@ -250,9 +347,19 @@ class OnlineRefitLoop:
         self._thread.start()
 
     def _loop(self) -> None:
-        while not self._stop.wait(self.config.interval_s):
+        rc = self.config
+        armed = (rc.on_drift is not None and self.drift is not None) or \
+                (rc.on_recall_alert and self.monitor is not None)
+        poll = rc.poll_s if (armed or rc.interval_s is None) \
+            else rc.interval_s
+        last = time.monotonic()
+        while not self._stop.wait(poll):
+            trigger = self.should_fire(time.monotonic() - last)
+            if trigger is None:
+                continue
             try:
-                self.run_cycle()
+                if self.run_cycle() is not None:
+                    last = time.monotonic()
             except Exception as e:   # noqa: BLE001 — loop must survive
                 self.registry.counter("refit_errors_total").inc()
                 warnings.warn(f"online refit cycle failed: {e!r}")

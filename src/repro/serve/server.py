@@ -88,6 +88,7 @@ class IRLIServer:
                  registry: "obs.MetricRegistry | None" = None,
                  staged: bool = False, probe_stats: bool = True,
                  qlog: "obs.QueryLog | None" = None,
+                 auditor=None, drift=None,
                  m=None, tau=None, k=None, metric=None, mode=None, topC=None):
         legacy = (params is None
                   and any(v is not None
@@ -128,6 +129,13 @@ class IRLIServer:
         # every served batch logs (query, result ids) pairs the
         # OnlineRefitLoop later drains as incremental training data
         self.qlog = qlog
+        # quality hooks (docs/quality.md) — both are hot-path cheap: the
+        # auditor's observe is a sampled ring write (the exact oracle runs
+        # on ITS background cadence, proven off the hot path by the
+        # query.audit_oracle_off_hot_path contract), the drift recorder one
+        # matmul + bincount over the batch
+        self.auditor = auditor
+        self.drift = drift
         self.q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self.registry.gauge("serve_epoch").set(getattr(index, "epoch", 0))
@@ -289,8 +297,18 @@ class IRLIServer:
                 reg.histogram("serve_candidates",
                               bounds=obs.COUNT_BUCKETS).observe_many(
                                   n_cand[:n])
+                # serve seconds for THIS batch, synchronized by the
+                # np.asarray conversions above; logged per entry so the
+                # shadow auditor can audit latency from the sampled stream
+                dt = time.perf_counter() - t0
                 if self.qlog is not None:   # pad rows sliced off first
-                    self.qlog.record(queries[:n], ids[:n])
+                    self.qlog.record(queries[:n], ids[:n],
+                                     epoch=int(res.epoch), latencies=dt)
+                if self.auditor is not None:
+                    self.auditor.observe(queries[:n], ids[:n],
+                                         epoch=int(res.epoch), latency_s=dt)
+                if self.drift is not None:
+                    self.drift.record(queries[:n])
                 if self._legacy_results:
                     out = [ids[i] for i in range(n)]
                 else:

@@ -240,6 +240,22 @@ class MutableIRLIIndex:
                             jnp.asarray(queries), delta_members,
                             s.tombstone, epoch=s.epoch, staged=staged)
 
+    def exact_oracle(self, k: int, metric: str = "angular"):
+        """A ``queries [n, d] -> exact ids [n, k]`` closure over the LIVE
+        corpus — the ShadowAuditor's ground truth (obs.quality). Full-probe
+        over the fp32 exact tier via :func:`core.query.exact_topk`; each
+        call reads ONE consistent snapshot, and it runs only on the sampled
+        audit window, never the serve path (contract
+        ``query.audit_oracle_off_hot_path``)."""
+        def oracle(queries):
+            s = self._snapshot
+            n = s.n_total
+            ids = Q.exact_topk(jnp.asarray(queries, jnp.float32),
+                               s.vecs[:n], s.tombstone[:n],
+                               k=k, metric=metric)
+            return np.asarray(ids)
+        return oracle
+
     def _record_state_gauges(self) -> None:
         """Refresh the streaming state gauges from the CURRENT snapshot
         (called after every mutation, under ``_mu``): live count, epoch,

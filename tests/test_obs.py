@@ -5,6 +5,7 @@ JSONL MetricsLogger, and the longitudinal perf-trajectory regression gate.
 """
 import json
 import math
+import time
 
 import numpy as np
 import pytest
@@ -352,3 +353,177 @@ def test_query_log_sampling_and_drain():
     # sample=0 keeps nothing but still counts traffic
     q2 = obs.QueryLog(capacity=8, sample=0.0, registry=obs.MetricRegistry())
     assert q2.record(x, ids) == 0 and len(q2) == 0
+
+
+def test_trajectory_quality_units_gate_inverted(tmp_path):
+    """Satellite spec: recall/frac rows are larger-is-better — the gate
+    flags a DROP below median/factor, never a rise; latency rows in the
+    same history keep the original larger-is-worse direction."""
+    from benchmarks import trajectory as tj
+    path = str(tmp_path / "T.jsonl")
+    tj.record("q", [("q/recall", 0.80, "")], unit="recall", path=path)
+    tj.record("q", [("q/recall", 0.78, "")], unit="recall", path=path)
+    assert tj.check(path) == []                   # within the 1/1.2 band
+    tj.record("q", [("q/recall", 0.95, "")], unit="recall", path=path)
+    assert tj.check(path) == []                   # improvement never fails
+    tj.record("q", [("q/recall", 0.50, "")], unit="recall", path=path)
+    fails = tj.check(path)
+    assert len(fails) == 1 and "q/recall" in fails[0]
+    assert "larger-is-better" in fails[0]
+    with pytest.raises(SystemExit):
+        tj.enforce(path)
+    # recovering clears the gate (newest vs median of priors)
+    tj.record("q", [("q/recall", 0.81, "")], unit="recall", path=path)
+    assert tj.check(path) == []
+    # zero is a legal (terrible) recall and still gates — unlike the
+    # zero-qps exemption on latency units
+    tj.record("q", [("q/recall", 0.0, "")], unit="recall", path=path)
+    assert any("q/recall" in f for f in tj.check(path))
+    # mixed-direction history: a latency regression in the same file is
+    # still caught with the original direction
+    tj.record("q", [("q/lat", 100.0, "")], path=path)
+    tj.record("q", [("q/lat", 100.0, "")], path=path)
+    tj.record("q", [("q/lat", 200.0, "")], path=path)
+    assert any("q/lat" in f for f in tj.check(path))
+    # frac shares the quality direction
+    p2 = str(tmp_path / "T2.jsonl")
+    tj.record("q", [("q/hit", 0.9, "")], unit="frac", path=p2)
+    tj.record("q", [("q/hit", 0.5, "")], unit="frac", path=p2)
+    assert len(tj.check(p2)) == 1
+
+
+def test_exposition_derived_quantiles_match_le_buckets():
+    """Satellite spec: to_text() carries derived p50/p95/p99 summary lines
+    that agree with Histogram.quantile's le-bucket interpolation."""
+    import re
+    reg = obs.MetricRegistry()
+    h = reg.histogram("lat", bounds=(1.0, 2.0, 4.0))
+    assert "quantile=" not in reg.to_text()       # empty -> no quantiles
+    h.observe_many([0.5, 1.5, 1.5, 3.0])
+    text = reg.to_text()
+    vals = {}
+    for q in ("0.5", "0.95", "0.99"):
+        m = re.search(r'lat\{quantile="%s"\} ([0-9.eE+-]+)' % q, text)
+        assert m, f"quantile {q} line missing:\n{text}"
+        vals[q] = float(m.group(1))
+    # exported values are exactly the histogram's own quantile estimates,
+    # each inside the le-bucket that contains that rank
+    assert vals["0.5"] == pytest.approx(h.quantile(0.5))
+    assert 1.0 <= vals["0.5"] <= 2.0              # median rank in (1, 2]
+    assert 2.0 <= vals["0.95"] <= 4.0             # p95 rank in (2, 4]
+    assert vals["0.5"] <= vals["0.95"] <= vals["0.99"]   # monotone in q
+    # the le-bucket lines themselves stay cumulative and end at +Inf
+    buckets = re.findall(r'lat_bucket\{le="([^"]+)"\} (\d+)', text)
+    counts = [int(c) for _, c in buckets]
+    assert counts == sorted(counts) and counts[-1] == 4
+    assert buckets[-1][0] == "+Inf"
+
+
+def test_query_log_sampling_uniform_and_fields_survive():
+    """Satellite spec: the keep decision is per-row Bernoulli(sample) —
+    independent of stream position — and (epoch, latency) survive drain
+    and DrainedLog.merge alongside (x, ids)."""
+    # position-uniformity: stream 4000 rows (position encoded in x[:, 0])
+    # at sample=0.25 into a ring big enough to never overwrite, then check
+    # retention per 500-row segment is flat
+    qlog = obs.QueryLog(capacity=4000, sample=0.25, seed=7)
+    for s in range(0, 4000, 100):
+        x = np.zeros((100, 2), np.float32)
+        x[:, 0] = np.arange(s, s + 100)
+        qlog.record(x, np.zeros((100, 3), np.int32))
+    w = qlog.drain()
+    pos = w.x[:, 0].astype(int)
+    per_seg = np.bincount(pos // 500, minlength=8)
+    # E[seg] = 125, sigma ~ 9.7; +-5 sigma keeps this deterministic-seed
+    # test far from flaky while catching any early/late bias
+    assert np.all(per_seg > 75) and np.all(per_seg < 175), per_seg
+    assert abs(len(w) - 1000) < 150
+    # with sample=1 the ring is a recency window: the LAST capacity rows
+    # survive an overflowing stream
+    q2 = obs.QueryLog(capacity=16, sample=1.0)
+    x = np.arange(40, dtype=np.float32).reshape(40, 1)
+    q2.record(x, np.zeros((40, 1), np.int32))
+    assert sorted(q2.drain().x[:, 0].astype(int)) == list(range(24, 40))
+
+    # epoch + latency ride along through drain ...
+    q3 = obs.QueryLog(capacity=32)
+    x3 = np.ones((3, 2), np.float32)
+    ids3 = np.zeros((3, 4), np.int32)
+    q3.record(x3, ids3, epoch=5, latencies=0.25)
+    q3.record(2 * x3, ids3 + 1, epoch=6, latencies=[0.1, 0.2, 0.3])
+    a = q3.drain()
+    assert a.epoch.tolist() == [5, 5, 5, 6, 6, 6]
+    np.testing.assert_allclose(a.latency,
+                               [0.25, 0.25, 0.25, 0.1, 0.2, 0.3], rtol=1e-6)
+    gx, gids = a                                  # legacy 2-tuple unpack
+    assert gx.shape == (6, 2) and a[1].shape == (6, 4)
+    # ... and through merge (self rows first, all four fields aligned)
+    q3.record(3 * x3, ids3 + 2, epoch=7)          # latency unmeasured -> nan
+    b = q3.drain()
+    m = a.merge(b)
+    assert len(m) == 9
+    assert m.epoch.tolist() == [5, 5, 5, 6, 6, 6, 7, 7, 7]
+    assert np.isnan(m.latency[-3:]).all()
+    np.testing.assert_allclose(m.latency[:6], a.latency, rtol=1e-6)
+    # empty windows are identity elements
+    empty = q3.drain()
+    assert m.merge(empty) is m and empty.merge(m) is m
+    # d/k mismatch refuses instead of silently mangling
+    q4 = obs.QueryLog(capacity=4)
+    q4.record(np.zeros((1, 3), np.float32), np.zeros((1, 4), np.int32))
+    with pytest.raises(ValueError, match="merge"):
+        m.merge(q4.drain())
+
+
+def test_vector_counter_concurrent_decay_reset_snapshot():
+    """Satellite spec: decay/reset racing snapshot/merge_snapshots never
+    tears — every observed count vector is finite, non-negative, and
+    mergeable, and reset windows + the final state account for every
+    increment exactly (reset is an atomic read+clear)."""
+    import threading
+    reg = obs.MetricRegistry()
+    v = reg.vector("probes", 32)
+    stop = threading.Event()
+    errs, windows = [], []
+    N_PER_CALL, writes = 64, [0, 0]
+
+    def writer(slot):
+        rng = np.random.default_rng(1 + slot)
+        while not stop.is_set():
+            v.inc_at(rng.integers(0, 32, N_PER_CALL))
+            writes[slot] += 1
+
+    def cycler():
+        while not stop.is_set():
+            v.decay(1.0)                          # identity decay: racy
+            windows.append(v.reset())             # path, conserved totals
+
+    def reader():
+        prev = None
+        while not stop.is_set():
+            try:
+                snap = reg.snapshot()
+                c = np.asarray(snap["probes"]["counts"])
+                assert c.shape == (32,)
+                assert np.all(np.isfinite(c)) and np.all(c >= 0)
+                if prev is not None:
+                    m = merge_snapshots(prev, snap)
+                    assert m["probes"]["sum"] >= 0
+                prev = snap
+            except Exception as e:                # pragma: no cover
+                errs.append(e)
+                return
+    threads = ([threading.Thread(target=writer, args=(i,)) for i in range(2)]
+               + [threading.Thread(target=cycler),
+                  threading.Thread(target=reader)])
+    for t in threads:
+        t.start()
+    time.sleep(0.4)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errs, errs
+    # conservation: with factor=1.0 decay, every increment lands in
+    # exactly one reset window or the final counts
+    total = sum(float(w.sum()) for w in windows) + float(v.value.sum())
+    assert total == sum(writes) * N_PER_CALL

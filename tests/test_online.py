@@ -415,3 +415,69 @@ def test_server_qlog_wiring(fitted, data):
     # logged ids are real served results (row order may interleave batches)
     assert (ids >= -1).all() and (ids < midx.n_total).all()
     assert all(r.epoch == midx.epoch for r in results)
+
+
+def test_refit_trigger_policy_and_sketch_freeze(fitted, data):
+    """PR-9 trigger policy: drift outranks recall-alert outranks interval,
+    every firing lands in refit_trigger_total{trigger=}; a triggered cycle
+    freezes the drained window's sketch into the artifact, re-anchors the
+    detector, and scores the swap as refit_audited_recall_*."""
+    from repro.obs.quality import (CRITICAL, DriftDetector, QuerySketch,
+                                   ShadowAuditor, SLOMonitor, SLOSpec)
+    midx = _fresh(fitted, data)
+    reg = midx.registry
+    qlog = QueryLog(capacity=1024, registry=reg)
+    sketch = QuerySketch(d=D, n_planes=6, seed=0)
+    drift = DriftDetector(sketch, reference=sketch.histogram(data.queries),
+                          registry=reg, min_count=8)
+    auditor = ShadowAuditor(
+        midx.exact_oracle(k=10), sample=1.0, registry=reg,
+        searcher=lambda q: np.asarray(midx.search(q, SP).ids))
+    # min_live_recall > 1 is unreachable: the alert must fire once audited
+    monitor = SLOMonitor(SLOSpec(min_live_recall=1.01, trip_after=1),
+                         registry=reg)
+    loop = OnlineRefitLoop(
+        midx, qlog,
+        config=RefitConfig(interval_s=10.0, on_drift=0.5,
+                           on_recall_alert=True, min_queries=8,
+                           rounds_per_cycle=1),
+        registry=reg, auditor=auditor, drift=drift, monitor=monitor)
+    # nothing armed yet: only the cadence fires
+    assert loop.should_fire(0.0) is None
+    assert loop.should_fire(11.0) == "interval"
+    # drifted traffic outranks the cadence
+    drifted = np.asarray(-data.queries + 2.0, np.float32)
+    drift.record(drifted)
+    assert drift.score() > 0.5
+    assert loop.should_fire(11.0) == "drift"
+    drift.reset_window()
+    assert loop.should_fire(0.0) is None         # evidence gone, no cadence
+    # a critical live_recall SLO fires the recall trigger
+    res = midx.search(data.queries, SP)
+    auditor.observe(np.asarray(data.queries, np.float32),
+                    np.asarray(res.ids), epoch=midx.epoch)
+    assert auditor.run_audit() is not None
+    monitor.evaluate()
+    assert monitor.state["live_recall"] == CRITICAL
+    assert loop.should_fire(0.0) == "recall"
+    snap = reg.snapshot()
+    for trig in ("interval", "drift", "recall"):
+        key = 'refit_trigger_total{trigger="%s"}' % trig
+        assert snap[key]["value"] >= 1, key
+    # a cycle over the drifted window freezes its sketch + re-anchors
+    drift.record(drifted)
+    qlog.record(drifted, data.gt[:, :10], epoch=midx.epoch)
+    art = loop.run_cycle()
+    assert art is not None and art.sketch is not None
+    assert art.meta_dict["sketch_planes"] == 6
+    assert art.meta_dict["sketch_seed"] == 0
+    np.testing.assert_allclose(np.asarray(drift.reference),
+                               np.asarray(art.sketch))
+    assert drift.score() < 0.5                   # fresh window, new anchor
+    snap = reg.snapshot()
+    for key in ("refit_audited_recall_pre", "refit_audited_recall_post",
+                "refit_audited_recall_delta"):
+        assert key in snap, key
+    assert snap["refit_audited_recall_delta"]["value"] == pytest.approx(
+        snap["refit_audited_recall_post"]["value"]
+        - snap["refit_audited_recall_pre"]["value"])

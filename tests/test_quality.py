@@ -1,0 +1,302 @@
+"""Live quality observability (repro.obs.quality + exposition endpoints):
+recall_rows pad semantics, QuerySketch determinism, KL/chi-square drift
+scores, DriftDetector windowing + re-anchoring, ShadowAuditor sampling and
+per-version attribution (oracle strictly off the observe path), SLOMonitor
+hysteresis + no-data gating, and the /healthz + /statusz HTTP contract.
+
+Everything here is numpy-only: repro.obs is a leaf package, so the index
+is faked with tiny injected callables.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.quality import (CRITICAL, OK, WARN, DriftDetector,
+                               QuerySketch, ShadowAuditor, SLOMonitor,
+                               SLOSpec, chi_square, kl_divergence,
+                               recall_rows)
+
+
+# ---------------------------------------------------------------- recall --
+def test_recall_rows_exact_and_pads():
+    served = np.array([[1, 2, 3], [4, 5, 6], [7, 8, 9]])
+    exact = np.array([[1, 2, 3], [6, 5, 0], [-1, -1, -1]])
+    r = recall_rows(served, exact)
+    assert r[0] == 1.0
+    assert r[1] == pytest.approx(2 / 3)
+    assert r[2] == 0.0                   # all-pad exact row: no div-by-zero
+    # -1 pads in EXACT shrink the denominator (oracle had < k' live rows)
+    r2 = recall_rows(np.array([[1, 2]]), np.array([[1, -1, -1]]))
+    assert r2[0] == 1.0
+    # -1 pads in SERVED never match a valid exact id
+    r3 = recall_rows(np.array([[-1, -1]]), np.array([[1, 2]]))
+    assert r3[0] == 0.0
+    with pytest.raises(ValueError, match="matching n"):
+        recall_rows(np.zeros((2, 3)), np.zeros((3, 3)))
+
+
+# ---------------------------------------------------------------- sketch --
+def test_query_sketch_deterministic_and_valid():
+    a = QuerySketch(d=8, n_planes=4, seed=3)
+    b = QuerySketch(d=8, n_planes=4, seed=3)
+    q = np.random.default_rng(0).standard_normal((64, 8)).astype(np.float32)
+    np.testing.assert_array_equal(a.bucket_ids(q), b.bucket_ids(q))
+    assert a.n_buckets == 16
+    ids = a.bucket_ids(q)
+    assert ids.min() >= 0 and ids.max() < 16
+    h = a.histogram(q)
+    assert h.shape == (16,) and h.sum() == 64
+    # a different seed gives different planes -> (generically) different ids
+    c = QuerySketch(d=8, n_planes=4, seed=4)
+    assert not np.array_equal(a.bucket_ids(q), c.bucket_ids(q))
+    with pytest.raises(ValueError, match="n_planes"):
+        QuerySketch(d=8, n_planes=0)
+    with pytest.raises(ValueError, match="expected queries"):
+        a.bucket_ids(np.zeros((4, 7), np.float32))
+
+
+def test_kl_and_chi_square_properties():
+    h = np.array([10.0, 20.0, 30.0, 40.0])
+    assert kl_divergence(h, h) == pytest.approx(0.0, abs=1e-12)
+    assert chi_square(h, h) == pytest.approx(0.0, abs=1e-12)
+    shifted = h[::-1].copy()
+    assert kl_divergence(shifted, h) > 0.01
+    assert chi_square(shifted, h) > 0.01
+    # smoothing keeps unseen-reference buckets finite
+    ref = np.array([0.0, 0.0, 50.0, 50.0])
+    live = np.array([50.0, 50.0, 0.0, 0.0])
+    assert np.isfinite(kl_divergence(live, ref))
+    assert kl_divergence(live, ref) > 1.0        # disjoint support is LOUD
+
+
+# ----------------------------------------------------------------- drift --
+def test_drift_detector_windowing_and_reanchor():
+    reg = obs.MetricRegistry()
+    sk = QuerySketch(d=8, n_planes=4, seed=0)
+    rng = np.random.default_rng(1)
+    ref_q = rng.standard_normal((512, 8)).astype(np.float32)
+    det = DriftDetector(sk, registry=reg, min_count=16)
+    # no reference yet -> score 0, but the evaluation is still counted
+    det.record(ref_q[:32])
+    assert det.score() == 0.0
+    assert reg.counter("drift_scores_total").value == 1
+    det.set_reference(sk.histogram(ref_q))
+    # below min_count -> "no evidence", not an alarm
+    det.reset_window()
+    det.record(ref_q[:8])
+    assert det.score() == 0.0
+    # same-distribution window scores low; a shifted one scores high
+    det.reset_window()
+    det.record(rng.standard_normal((512, 8)).astype(np.float32))
+    same = det.score()
+    det.reset_window()
+    det.record(np.abs(ref_q) + 3.0)              # all-positive: one orthant
+    drifted = det.score()
+    assert drifted > same and drifted > 0.5
+    assert reg.gauge("query_drift_score").value == pytest.approx(drifted)
+    assert reg.gauge("drift_chi_square").value > 0
+    # re-anchor (what the refit swap does): fresh window scores clean again
+    det.set_reference(sk.histogram(np.abs(ref_q) + 3.0))
+    det.reset_window()
+    det.record(np.abs(ref_q[:256]) + 3.0)
+    assert det.score() < 0.1
+    with pytest.raises(ValueError, match="buckets"):
+        det.set_reference(np.ones(7))
+
+
+# --------------------------------------------------------- shadow auditor --
+def _fake_index(n_items=32, k=4):
+    """A deterministic toy 'index': oracle = true top-k by first coordinate
+    bucket; serve = the oracle with the last id corrupted (recall 3/4)."""
+    def oracle(queries):
+        n = np.asarray(queries).shape[0]
+        return np.tile(np.arange(k, dtype=np.int32), (n, 1))
+
+    def searcher(queries):
+        ids = oracle(queries)
+        ids[:, -1] = n_items - 1                 # one wrong id per row
+        return ids
+    return oracle, searcher
+
+
+def test_shadow_auditor_oracle_off_observe_path():
+    """The oracle must run only inside run_audit, never in observe — the
+    runtime half of the query.audit_oracle_off_hot_path contract."""
+    calls = []
+    oracle, searcher = _fake_index()
+
+    def counting_oracle(q):
+        calls.append(np.asarray(q).shape[0])
+        return oracle(q)
+
+    reg = obs.MetricRegistry()
+    aud = ShadowAuditor(counting_oracle, sample=1.0, registry=reg)
+    q = np.zeros((16, 8), np.float32)
+    aud.observe(q, searcher(q), epoch=3, latency_s=2e-3)
+    assert calls == []                           # hot path: sampling only
+    audit = aud.run_audit()
+    assert calls == [16]                         # one oracle pass per audit
+    assert audit["live_recall"] == pytest.approx(0.75)
+    assert audit["by_version"] == {3: pytest.approx(0.75)}
+    assert reg.counter("quality_observed_total").value == 16
+    assert reg.counter("quality_audits_total").value == 1
+    # nothing new sampled -> no audit, no extra oracle work
+    assert aud.run_audit() is None and calls == [16]
+
+
+def test_shadow_auditor_per_version_attribution_and_sampling():
+    oracle, searcher = _fake_index()
+    reg = obs.MetricRegistry()
+    aud = ShadowAuditor(oracle, sample=1.0, registry=reg, searcher=searcher)
+    q = np.zeros((8, 8), np.float32)
+    aud.observe(q, searcher(q), epoch=1, latency_s=1e-3)
+    aud.observe(q, oracle(q), epoch=2, latency_s=1e-3)   # v2 serves exactly
+    audit = aud.run_audit()
+    assert audit["n_audited"] == 16
+    assert audit["by_version"][1] == pytest.approx(0.75)
+    assert audit["by_version"][2] == pytest.approx(1.0)
+    snap = reg.snapshot()
+    assert snap['quality_live_recall{version="1"}']["value"] \
+        == pytest.approx(0.75)
+    assert snap['quality_live_recall{version="2"}']["value"] \
+        == pytest.approx(1.0)
+    assert snap["quality_live_recall"]["value"] == pytest.approx(0.875)
+    assert snap["quality_served_latency_seconds"]["count"] == 16
+    # recall_of: the refit loop's one-shot swap probe (no sampling state)
+    assert aud.recall_of(q, searcher(q)) == pytest.approx(0.75)
+    assert aud.recall_of(q, aud.searcher(q)) == pytest.approx(0.75)
+    # sub-sampling actually drops rows (deterministic seed)
+    aud2 = ShadowAuditor(oracle, sample=0.25, seed=0,
+                         registry=obs.MetricRegistry())
+    kept = aud2.observe(np.zeros((400, 8), np.float32),
+                        oracle(np.zeros((400, 8))), epoch=1)
+    assert 50 < kept < 150
+
+
+# ------------------------------------------------------------------- SLO --
+def test_slo_monitor_hysteresis_and_no_data():
+    reg = obs.MetricRegistry()
+    spec = SLOSpec(min_live_recall=0.8, trip_after=2, clear_after=2)
+    mon = SLOMonitor(spec, registry=reg)
+    # no data at all: the rule holds OK instead of false-alarming
+    assert mon.evaluate() == {"live_recall": OK}
+    assert mon.health()["status"] == "ok"
+    # arm the signal the way the auditor would
+    reg.counter("quality_audits_total").inc()
+    g = reg.gauge("quality_live_recall")
+    g.set(0.5)
+    assert mon.evaluate()["live_recall"] == WARN       # first breach
+    assert mon.evaluate()["live_recall"] == CRITICAL   # trip_after=2
+    assert mon.health()["status"] == "critical"
+    assert reg.gauge("slo_health").value == CRITICAL
+    # one clear evaluation is not enough (clear_after=2) ...
+    g.set(0.95)
+    assert mon.evaluate()["live_recall"] == CRITICAL
+    # ... two are
+    assert mon.evaluate()["live_recall"] == OK
+    assert mon.health() == {"status": "ok", "states": {"live_recall": "ok"}}
+    snap = reg.snapshot()
+    assert snap['slo_breaches_total{slo="live_recall"}']["value"] == 2
+    assert snap['slo_value{slo="live_recall"}']["value"] == 0.95
+    assert snap['slo_transitions_total{slo="live_recall"}']["value"] >= 3
+    assert snap["slo_evaluations_total"]["value"] == 5
+
+
+def test_slo_monitor_latency_and_load_rules():
+    reg = obs.MetricRegistry()
+    mon = SLOMonitor(SLOSpec(p99_latency_s=0.01, max_load_kl=0.5,
+                             trip_after=1), registry=reg)
+    # both signals missing: everything OK
+    assert set(mon.evaluate().values()) == {OK}
+    # p99 over budget trips immediately (trip_after=1 -> straight critical)
+    reg.histogram("serve_batch_seconds").observe_many(np.full(100, 0.05))
+    probes = reg.vector("serve_bucket_probes", 8)
+    probes.inc_at(np.zeros(100, np.int64))       # everything in one bucket
+    states = mon.evaluate()
+    assert states["p99_latency"] == CRITICAL
+    assert states["load_kl"] == CRITICAL         # KL ~ log(8) >> 0.5
+    assert mon.health()["status"] == "critical"
+    # balanced probes + a no-data latency reset is impossible (histograms
+    # only grow), so recovery is driven by the load rule alone
+    probes.reset()
+    probes.inc_at(np.arange(8).repeat(50))
+    assert mon.evaluate()["load_kl"] == CRITICAL  # clear_after=2: held
+    states = mon.evaluate()
+    assert states["load_kl"] == OK               # second clear recovers
+    assert states["p99_latency"] == CRITICAL     # still breaching
+
+
+def test_slo_monitor_background_thread():
+    reg = obs.MetricRegistry()
+    reg.counter("drift_scores_total").inc()
+    reg.gauge("query_drift_score").set(9.0)
+    mon = SLOMonitor(SLOSpec(max_drift=1.0, trip_after=1), registry=reg)
+    mon.start(interval_s=0.01)
+    with pytest.raises(RuntimeError):
+        mon.start()
+    import time
+    deadline = time.time() + 30
+    while (reg.counter("slo_evaluations_total").value < 3
+           and time.time() < deadline):
+        time.sleep(0.01)
+    mon.stop()
+    assert mon.state["drift"] == CRITICAL
+
+
+# ------------------------------------------------------------- endpoints --
+def _get(port, path):
+    url = f"http://127.0.0.1:{port}{path}"
+    try:
+        with urllib.request.urlopen(url, timeout=30) as r:
+            return r.status, r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read()
+
+
+def test_healthz_statusz_endpoints():
+    reg = obs.MetricRegistry()
+    reg.counter("requests_total").inc(7)
+    state = {"status": "ok"}
+    srv = obs.start_metrics_server(
+        reg, 0, host="127.0.0.1", health=lambda: dict(state),
+        status=lambda: {"artifact_version": 42})
+    port = srv.server_address[1]
+    try:
+        code, body = _get(port, "/healthz")
+        assert code == 200 and json.loads(body)["status"] == "ok"
+        # critical health flips ONLY /healthz to 503; /metrics stays up
+        state["status"] = "critical"
+        code, body = _get(port, "/healthz")
+        assert code == 503 and json.loads(body)["status"] == "critical"
+        assert _get(port, "/metrics")[0] == 200
+        code, body = _get(port, "/statusz")
+        assert code == 200
+        sz = json.loads(body)
+        assert sz["artifact_version"] == 42
+        assert sz["health"]["status"] == "critical"
+        assert sz["uptime_s"] >= 0
+        # recovery is visible without restarting anything
+        state["status"] = "warn"                 # degraded != down
+        assert _get(port, "/healthz")[0] == 200
+        code, body = _get(port, "/metrics")
+        assert b"requests_total 7" in body
+        assert _get(port, "/nope")[0] == 404
+    finally:
+        srv.shutdown()
+
+
+def test_healthz_without_monitor_is_ok():
+    reg = obs.MetricRegistry()
+    srv = obs.start_metrics_server(reg, 0, host="127.0.0.1")
+    port = srv.server_address[1]
+    try:
+        code, body = _get(port, "/healthz")
+        assert code == 200 and json.loads(body) == {"status": "ok"}
+        code, body = _get(port, "/statusz")
+        assert code == 200 and json.loads(body)["uptime_s"] >= 0
+    finally:
+        srv.shutdown()
