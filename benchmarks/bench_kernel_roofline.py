@@ -1,9 +1,13 @@
-"""Per-kernel roofline: lower the two serving hot-spot kernels —
-``frequency_topC`` (FrequentOnes compact candidate counting) and
-``quant_coarse_topk`` (fused int8 dequant + coarse rerank) — through their
-REAL dispatch sites at serving shapes, count flops + HBM traffic from the
-compiled HLO (hlo_analysis.analyze_hlo), time them, and report achieved
-bandwidth against the TPU v5e peaks in roofline.py (kernel_roofline).
+"""Per-kernel roofline: lower the four serving hot-spot stages —
+``scorer_logits`` (the two fused scorer GEMMs), ``gather_members`` (probed
+bucket-row gather), ``frequency_topC`` (FrequentOnes compact candidate
+counting) and ``quant_coarse_topk`` (fused int8 dequant + coarse rerank) —
+through their REAL dispatch sites at serving shapes, count flops + HBM
+traffic from the compiled HLO (hlo_analysis.analyze_hlo), time them, and
+report achieved bandwidth against the TPU v5e peaks in roofline.py
+(kernel_roofline). These per-stage peaks are what the megakernel budget
+(repro.kernels.mega_query.ops) has to beat in one launch
+(benchmarks/bench_megakernel.py).
 
 Each row is also pushed through the obs.MetricRegistry as
 ``kernel_achieved_gbps{kernel=...}`` / ``kernel_roofline_frac{kernel=...}``
@@ -48,7 +52,8 @@ def run(csv=True, registry=None):
 
     from benchmarks.roofline import kernel_roofline
     from repro import obs
-    from repro.core.query import frequency_topC
+    from repro.core.network import scorer_logits
+    from repro.core.query import frequency_topC, gather_members
     from repro.kernels.quant_rerank.ops import quant_coarse_topk
 
     reg = obs.get_registry(registry)
@@ -58,6 +63,23 @@ def run(csv=True, registry=None):
     # serving shapes: Q queries x (R reps * m probes * bucket width) gathered
     # candidates over an L-row corpus shard (docs/search_api.md)
     Q, W, C, L, D, BLOCK, K = 64, 2048, 256, 1 << 14, 64, 32, 32
+    R, B, H, ML, M_PROBE = 2, 1024, 256, 32, 4
+
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(R, D, H)) * 0.05, jnp.float32),
+        "b1": jnp.zeros((R, H), jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(R, H, B)) * 0.05, jnp.float32),
+        "b2": jnp.zeros((R, B), jnp.float32),
+    }
+    sc_queries = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    cases.append((f"scorer_logits_Q{Q}xB{B}_R{R}", scorer_logits,
+                  (params, sc_queries)))
+
+    mem = jnp.asarray(rng.integers(0, L, (R, B, ML)), jnp.int32)
+    bidx = jnp.asarray(rng.integers(0, B, (R, Q, M_PROBE)), jnp.int32)
+    cases.append((f"member_gather_Q{Q}xm{M_PROBE}_ML{ML}", gather_members,
+                  (mem, bidx)))
+
     cands = jnp.asarray(rng.integers(0, L, (Q, W)), jnp.int32)
 
     def freq_fn(c):

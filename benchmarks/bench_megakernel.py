@@ -1,0 +1,196 @@
+"""Megakernel bench: the fused single-dispatch query path (mode="mega",
+repro.kernels.mega_query) against the staged compact pipeline it replaces,
+at serving shapes.
+
+Two views, one artifact (``artifacts/BENCH_megakernel.json``):
+
+  * **per-stage** — each compact serving stage (scorer_logits, top_m,
+    gather, freq_topc, quant_coarse, refine) lowered through its REAL
+    staged-mode jit, timed, and scored against the roofline peaks
+    (benchmarks/roofline.kernel_roofline). These are the dispatch
+    boundaries — and the HBM round-trips — the megakernel fuses away.
+  * **end-to-end** — fused ``mode="mega"`` search (ONE dispatch) against
+    two multi-dispatch comparators at growing query batches:
+    ``compact.search`` called exactly as un-jitted callers call it (every
+    XLA op is its own dispatch — the path mode="mega" replaces) and the
+    fenced ``search_staged`` reference (per-stage jits + fences). The
+    issue's acceptance bar is fused >= 1.5x the multi-dispatch compact
+    path at Q >= 256; the measured speedup lands in the artifact and the
+    ``frac``-unit trajectory row so the gate in benchmarks/trajectory.py
+    catches a future erosion. Both comparators must stay BITWISE equal to
+    fused — the bench asserts it on every batch.
+
+Latency rows are recorded under unit "us_per_call" (gated larger-is-worse),
+the Q=256 speedup under unit "frac" (gated larger-is-better).
+
+    PYTHONPATH=src python -m benchmarks.bench_megakernel
+"""
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.bench_kernel_roofline import _analyze, _timed
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+OUT_PATH = os.path.join(ART, "BENCH_megakernel.json")
+
+#: end-to-end batch sweep; 256 is the issue's acceptance point
+BATCHES = (64, 256)
+#: serving geometry (mirrors bench_kernel_roofline, plus the scorer dims)
+L, D, R, B, H, ML, M_PROBE, TOPC, K, KP, BLOCK = (
+    1 << 14, 64, 2, 1024, 256, 32, 4, 256, 32, 64, 32)
+
+
+def _fixture():
+    import jax.numpy as jnp
+
+    from repro.core.query import QueryPipeline
+    from repro.store import encode
+
+    rng = np.random.default_rng(0)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(R, D, H)) * 0.05, jnp.float32),
+        "b1": jnp.zeros((R, H), jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(R, H, B)) * 0.05, jnp.float32),
+        "b2": jnp.zeros((R, B), jnp.float32),
+    }
+    members = jnp.asarray(rng.integers(0, L, (R, B, ML)), jnp.int32)
+    base = rng.normal(size=(L, D)).astype(np.float32)
+    store = encode(base, "int8", BLOCK, keep_exact=True)
+    queries = {q: jnp.asarray(rng.normal(size=(q, D)), jnp.float32)
+               for q in BATCHES}
+    pipe = QueryPipeline(m=M_PROBE, tau=1, k=K, mode="mega", topC=TOPC,
+                         store_dtype="int8", refine_k=KP)
+    return params, members, store, queries, pipe
+
+
+def _staged_once(pipe, params, members, store, q, reg):
+    """One fenced staged pass (the multi-dispatch comparator)."""
+    return pipe.search_staged(params, members, store, q, registry=reg)
+
+
+def run(csv=True, registry=None):
+    import jax
+
+    from benchmarks.roofline import kernel_roofline
+    from repro import obs
+    from repro.core import query as Q
+
+    reg = obs.get_registry(registry)
+    params, members, store, queries, pipe = _fixture()
+    compact = dataclasses.replace(pipe, mode="compact")
+    rows, stage_report, e2e_report = [], [], []
+
+    # ---- per-stage achieved-vs-peak bandwidth (the fused-away dispatches)
+    qs = queries[max(BATCHES)]
+    logits = Q._stage_logits(compact, params, qs)
+    bidx, keep = Q._stage_topm(compact, logits)
+    cands = Q._stage_gather(compact, members, bidx, keep, None, None)
+    cid, cnt, _ = Q._stage_freq_topc(compact, cands)
+    cids = Q._stage_quant_coarse(compact, qs, store, cid, cnt)
+    stages = [
+        ("scorer_logits", Q._stage_logits, (params, qs)),
+        ("top_m", Q._stage_topm, (logits,)),
+        ("member_gather", Q._stage_gather, (members, bidx, keep, None,
+                                            None)),
+        ("freq_topc", Q._stage_freq_topc, (cands,)),
+        ("quant_coarse", Q._stage_quant_coarse, (qs, store, cid, cnt)),
+        ("refine", Q._stage_quant_refine, (qs, store, cids)),
+    ]
+    for name, stage_fn, args in stages:
+        fn = (lambda f: lambda *a: f(compact, *a))(stage_fn)
+        counts = _analyze(fn, *args)
+        sec = _timed(fn, *args)
+        rl = kernel_roofline(name, sec, counts["flops"],
+                             counts["hbm_bytes"])
+        labels = {"stage": name}
+        reg.gauge("mega_stage_achieved_gbps", labels).set(
+            rl["achieved_gbps"])
+        reg.gauge("mega_stage_roofline_frac", labels).set(
+            rl["frac_of_roofline"])
+        stage_report.append({
+            "stage": name, "us": sec * 1e6, "flops": counts["flops"],
+            "hbm_bytes": counts["hbm_bytes"],
+            "achieved_gbps": rl["achieved_gbps"],
+            "peak_gbps": rl["peak_gbps"], "bound": rl["bound"],
+            "frac_of_roofline": rl["frac_of_roofline"]})
+        rows.append((f"megakernel/stage_{name}", sec * 1e6,
+                     f"gbps={rl['achieved_gbps']:.2f}"
+                     f"(peak={rl['peak_gbps']:.0f});bound={rl['bound']}"))
+
+    # ---- end-to-end: fused single dispatch vs the multi-dispatch paths
+    speedup_256 = None
+    for q_batch in BATCHES:
+        q = queries[q_batch]
+
+        def fused(qq):
+            return pipe.search(params, members, store, qq)
+
+        def multi(qq):
+            # compact.search exactly as un-jitted callers invoke it: every
+            # XLA op dispatches separately — what mode="mega" replaces
+            return compact.search(params, members, store, qq)
+
+        def staged(qq):
+            return _staged_once(compact, params, members, store, qq, reg)
+
+        f_out = jax.block_until_ready(fused(q))
+        for name, other in (("multi", multi(q)), ("staged", staged(q))):
+            for a, b in zip(f_out, jax.block_until_ready(other)):
+                if np.asarray(a).tobytes() != np.asarray(b).tobytes():
+                    raise AssertionError(
+                        f"mode='mega' not bitwise equal to {name} compact "
+                        f"path at Q={q_batch}")
+        fused_sec = _timed(fused, q)
+        multi_sec = _timed(multi, q)
+        staged_sec = _timed(staged, q)
+        speedup = multi_sec / fused_sec
+        if q_batch == 256:
+            speedup_256 = speedup
+        e2e_report.append({
+            "q_batch": q_batch, "fused_us": fused_sec * 1e6,
+            "multi_dispatch_us": multi_sec * 1e6,
+            "staged_us": staged_sec * 1e6, "speedup": speedup,
+            "speedup_vs_staged": staged_sec / fused_sec,
+            "bitwise_equal": True})
+        rows.append((f"megakernel/fused_Q{q_batch}", fused_sec * 1e6,
+                     f"speedup_vs_multi={speedup:.2f};bitwise=True"))
+        rows.append((f"megakernel/multi_dispatch_Q{q_batch}",
+                     multi_sec * 1e6, "op_per_dispatch_compact"))
+        rows.append((f"megakernel/staged_Q{q_batch}", staged_sec * 1e6,
+                     "fenced_stage_reference"))
+
+    report = {
+        "geometry": {"L": L, "D": D, "R": R, "B": B, "H": H, "ML": ML,
+                     "m": M_PROBE, "topC": TOPC, "k": K, "refine_k": KP,
+                     "store": "int8", "backend": jax.default_backend()},
+        "stages": stage_report,
+        "end_to_end": e2e_report,
+        "speedup_at_256": speedup_256,
+        "meets_1p5x_at_256": (speedup_256 is not None
+                              and speedup_256 >= 1.5),
+        "ts": time.time(),
+    }
+    os.makedirs(ART, exist_ok=True)
+    with open(OUT_PATH, "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2)
+
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived}")
+    from benchmarks import trajectory
+    trajectory.record("megakernel", rows, registry=reg)
+    if speedup_256 is not None:
+        trajectory.record(
+            "megakernel",
+            [("megakernel/speedup_Q256", speedup_256,
+              f"fused_vs_staged;meets_1.5x={speedup_256 >= 1.5}")],
+            unit="frac", registry=reg)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

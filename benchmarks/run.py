@@ -29,7 +29,10 @@ BENCHES = [
     ("online", "benchmarks.bench_online",
      "online refit under drift: recall-gap recovery + swap-pause p99"),
     ("kernel_roofline", "benchmarks.bench_kernel_roofline",
-     "freq_topc + quant_rerank achieved-vs-peak bandwidth"),
+     "scorer_logits + member_gather + freq_topc + quant_rerank "
+     "achieved-vs-peak bandwidth"),
+    ("megakernel", "benchmarks.bench_megakernel",
+     "fused single-dispatch query path vs staged compact pipeline"),
 ]
 
 

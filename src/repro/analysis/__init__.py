@@ -10,8 +10,8 @@ Three analyzers and a contract DSL (docs/analysis.md):
   * :mod:`repro.analysis.recompile` — trace counting per jitted entry /
     PipelineCache under parameter sweeps (weak-type drift detection)
   * :mod:`repro.analysis.contracts` — the DSL (forbid_dims,
-    max_intermediate_bytes, require_dtype_free, require_donated,
-    max_trace_count, allowed_collectives), the process-wide
+    max_intermediate_bytes, max_dispatches, require_dtype_free,
+    require_donated, max_trace_count, allowed_collectives), the process-wide
     :data:`~repro.analysis.contracts.REGISTRY`, and ``audit()``
 
 Contracts are declared beside the entry points they govern; importing those
@@ -20,7 +20,8 @@ so the audit CLI and tests see the full set.
 """
 from repro.analysis.contracts import (Contract, ContractRegistry, Fixture,
                                       REGISTRY, allowed_collectives, audit,
-                                      forbid_dims, max_intermediate_bytes,
+                                      forbid_dims, max_dispatches,
+                                      max_intermediate_bytes,
                                       max_trace_count, register,
                                       require_dims, require_donated,
                                       require_dtype_free)
@@ -28,8 +29,8 @@ from repro.analysis.contracts import (Contract, ContractRegistry, Fixture,
 __all__ = [
     "Contract", "ContractRegistry", "Fixture", "REGISTRY",
     "allowed_collectives", "audit", "forbid_dims", "load_all",
-    "max_intermediate_bytes", "max_trace_count", "register", "require_dims",
-    "require_donated", "require_dtype_free",
+    "max_dispatches", "max_intermediate_bytes", "max_trace_count",
+    "register", "require_dims", "require_donated", "require_dtype_free",
 ]
 
 #: every module that declares contracts at import time — load_all() imports
@@ -45,6 +46,7 @@ _CONTRACT_MODULES = (
     "repro.kernels.quant_rerank.ops",
     "repro.kernels.distance_topk.ops",
     "repro.kernels.irli_topk.ops",
+    "repro.kernels.mega_query.ops",
 )
 
 

@@ -16,6 +16,9 @@ A :class:`Contract` bundles:
       ``require_dims("Q", "k")``        some intermediate DOES carry the
                                         dims (non-vacuity sighting)
       ``max_intermediate_bytes(2**20)`` peak single traced intermediate
+      ``max_dispatches(1)``             at most N top-level dispatch eqns
+                                        (pjit/pallas_call) in the trace —
+                                        the fused-megakernel proof
       ``require_dtype_free(np.float32, "L", "D")``
                                         no intermediate of that dtype
                                         carries the dims (int8 store proof)
@@ -153,6 +156,20 @@ def max_intermediate_bytes(limit: int):
             f"peak {rep.bytes}B {rep.dtype}{list(rep.shape)} "
             f"from {rep.primitive!r} (limit {limit}B)")
     return Check("max_intermediate_bytes", True, run, label)
+
+
+def max_dispatches(limit: int):
+    """At most ``limit`` top-level dispatch eqns (pjit / pallas_call) in
+    the fixture's trace — the single-launch proof of a fused pipeline.
+    Negative: the control (the per-stage split of the same computation)
+    must exceed the limit, or the counter went blind."""
+    label = f"max_dispatches({limit})"
+
+    def run(fx: Fixture) -> CheckResult:
+        n = _jaxpr.count_dispatches(fx.fn, fx.args)
+        return CheckResult(label, n <= limit,
+                           f"{n} top-level dispatch(es) (limit {limit})")
+    return Check("max_dispatches", True, run, label)
 
 
 def require_dtype_free(dtype, *names: str):

@@ -125,6 +125,58 @@ def store_search(dtype: str) -> Fixture:
                          "kp": ST_KP})
 
 
+def mega_store_search() -> Fixture:
+    """mode="mega" over the SAME int8 toy as store_search — the
+    ``query.mega_single_dispatch`` fixture: the whole search must trace as
+    one top-level dispatch with the compact memory guarantees inside."""
+    import jax.numpy as jnp
+    from repro.core.query import QueryPipeline
+    from repro.store import encode
+    idx = _untrained_index(ST_L, d=ST_D, seed=7)
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=(ST_L, ST_D)).astype(np.float32)
+    queries = jnp.asarray(rng.normal(size=(ST_Q, ST_D)), jnp.float32)
+    store = encode(base, "int8", 16)
+    pipe = QueryPipeline(m=M_PROBE, tau=1, k=K_TOP, mode="mega",
+                        topC=ST_C, store_dtype="int8", refine_k=ST_KP)
+    fn = lambda p, mem, s, q: pipe.search(p, mem, s, q)
+    return Fixture(fn=fn,
+                   args=(idx.params, idx.index.members, store, queries),
+                   dims={"Q": ST_Q, "L": ST_L, "D": ST_D, "C": ST_C,
+                         "kp": ST_KP})
+
+
+def mega_split_control() -> Fixture:
+    """The SAME search as a per-stage pipeline — six separately-jitted
+    stage dispatches (the pre-megakernel hot path, what search_staged
+    runs) — MUST trip max_dispatches(1). Also the audit.py seeded
+    violation (``--seed-violation split_dispatch``)."""
+    import jax.numpy as jnp
+    from repro.core import query as Q
+    from repro.store import encode
+    idx = _untrained_index(ST_L, d=ST_D, seed=7)
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=(ST_L, ST_D)).astype(np.float32)
+    queries = jnp.asarray(rng.normal(size=(ST_Q, ST_D)), jnp.float32)
+    store = encode(base, "int8", 16)
+    pipe = Q.QueryPipeline(m=M_PROBE, tau=1, k=K_TOP, mode="compact",
+                           topC=ST_C, store_dtype="int8", refine_k=ST_KP)
+
+    def fn(p, mem, s, q):
+        logits = Q._stage_logits(pipe, p, q)
+        bidx, keep = Q._stage_topm(pipe, logits)
+        cands = Q._stage_gather(pipe, mem, bidx, keep, None, None)
+        cid, cnt, n_cand = Q._stage_freq_topc(pipe, cands)
+        cids = Q._stage_quant_coarse(pipe, q, s, cid, cnt)
+        ids, scores = Q._stage_quant_refine(pipe, q, s, cids)
+        return ids, scores, n_cand
+
+    return Fixture(fn=fn,
+                   args=(idx.params, idx.index.members, store, queries),
+                   dims={"Q": ST_Q, "L": ST_L, "D": ST_D, "C": ST_C,
+                         "kp": ST_KP})
+
+
 # -------------------------------------------------------------------- fit --
 def _fit_parts():
     import jax

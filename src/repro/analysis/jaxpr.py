@@ -82,6 +82,23 @@ def materializes_dims(fn, args, *dims, dtype=None):
     return False
 
 
+#: top-level primitives that launch device work as a separate dispatch —
+#: a jitted call and a bare pallas_call each cost one kernel round-trip
+_DISPATCH_PRIMITIVES = ("pjit", "pallas_call")
+
+
+def count_dispatches(fn, args) -> int:
+    """Number of TOP-LEVEL dispatch sites (pjit / pallas_call eqns) in the
+    trace of ``fn(*args)``. Deliberately NOT recursive — a jit that nests
+    further jits/pallas_calls still launches as one fused executable, while
+    N sibling eqns at the top level are N separate dispatches with an HBM
+    round-trip between each (the cost the megakernel removes). This is the
+    detector behind ``max_dispatches`` / ``query.mega_single_dispatch``."""
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    return sum(1 for e in jaxpr.eqns
+               if e.primitive.name in _DISPATCH_PRIMITIVES)
+
+
 def _aval_bytes(a) -> int:
     shape = getattr(a, "shape", None)
     dt = getattr(a, "dtype", None)

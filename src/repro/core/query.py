@@ -268,21 +268,36 @@ DENSE_TABLE_BUDGET_BYTES = 64 << 20   # default cap on the [Q, L] fp32 tables
 
 def select_mode(L: int, q_batch: int = 512,
                 budget_bytes: int = DENSE_TABLE_BUDGET_BYTES,
-                store_dtype: str = "fp32") -> str:
+                store_dtype: str = "fp32", *, m: int | None = None,
+                topC: int | None = None, refine_k: int | None = None,
+                k: int | None = None) -> str:
     """Pick the frequency/rerank backend from the per-shard corpus size.
 
     dense materializes two [q_batch, L] fp32 tables (counts + similarities);
     compact's intermediates are O(q_batch · C0). Returns "dense" while the
-    tables fit the budget, else "compact".
+    tables fit the budget, else "compact" — unless the caller passes the
+    probe/rerank knobs (``m``, ``topC``, ``refine_k``, ``k``), in which
+    case the fused megakernel ("mega", kernels/mega_query) is preferred
+    over compact whenever its VMEM tile footprint fits the roofline budget
+    (``mega_fits``): oversized knob combos — candidate widths past the
+    freq_topc sort bound, or tile sets past the VMEM budget — fall back to
+    compact instead of failing at lowering. Without the knobs the legacy
+    dense/compact rule applies unchanged (``QueryPipeline.make``).
 
-    The accounting is CODE bytes, not fp32 bytes: a quantized store
+    The dense accounting is CODE bytes, not fp32 bytes: a quantized store
     (``store_dtype`` != "fp32") holds int8/bf16 codes, and dense's
     full-matrix rerank would have to decode the whole [L, D] corpus back
     to fp32 — exactly the array the store exists to never materialize —
-    so auto always resolves compact for quantized stores."""
-    if store_dtype != "fp32":
-        return "compact"
-    return "dense" if 2 * q_batch * L * 4 <= budget_bytes else "compact"
+    so auto never resolves dense for quantized stores."""
+    dense_fits = (store_dtype == "fp32"
+                  and 2 * q_batch * L * 4 <= budget_bytes)
+    if dense_fits:
+        return "dense"
+    if None not in (m, topC, refine_k, k):
+        from repro.kernels.mega_query.ops import mega_fits
+        if mega_fits(m, topC, refine_k, k):
+            return "mega"
+    return "compact"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -300,6 +315,14 @@ class QueryPipeline:
     top-k. n_candidates is therefore capped at ``topC`` in compact mode,
     while dense counts every survivor.
 
+    mode="mega" is the compact path as ONE fused dispatch
+    (kernels/mega_query, docs/query_paths.md): the Pallas megakernel on
+    TPU when the shapes fit its VMEM budget, a single jit of the verbatim
+    compact op sequence everywhere else — so results are bit-identical to
+    mode="compact" on every surface, including streaming delta/tombstone
+    state and ``adaptive_m`` (contract ``query.mega_single_dispatch``;
+    parity pinned by tests/test_mega_query.py).
+
     ``store_dtype`` selects the vector-payload tier (docs/store.md): "fp32"
     reranks gathered raw rows (bit-identical whether ``base`` is an array
     or a fp32 QuantizedStore); "int8"/"bf16" run the tiered two-stage
@@ -311,7 +334,7 @@ class QueryPipeline:
     m: int = 5
     tau: int = 1
     k: int = 10
-    mode: str = "compact"          # "dense" | "compact"
+    mode: str = "compact"          # "dense" | "compact" | "mega"
     topC: int = 1024               # compact candidate budget per query
     metric: str = "angular"
     store_dtype: str = "fp32"      # "fp32" | "int8" | "bf16" (docs/store.md)
@@ -326,9 +349,10 @@ class QueryPipeline:
     # training loss is irrelevant at serve time
 
     def __post_init__(self):
-        if self.mode not in ("dense", "compact"):
+        if self.mode not in ("dense", "compact", "mega"):
             raise ValueError(f"unknown pipeline mode {self.mode!r} "
-                             "(use 'dense', 'compact', or make(mode='auto'))")
+                             "(use 'dense', 'compact', 'mega', or "
+                             "make(mode='auto'))")
         if self.store_dtype not in ("fp32", "int8", "bf16"):
             raise ValueError(f"unknown store_dtype {self.store_dtype!r} "
                              "(use 'fp32', 'int8', or 'bf16')")
@@ -392,6 +416,12 @@ class QueryPipeline:
         :class:`~repro.store.quantized.QuantizedStore` over the same rows.
         """
         store = self.resolve_store(base)
+        if self.mode == "mega":
+            # the ONE fused dispatch (kernels/mega_query): Pallas kernel
+            # when eligible, a single jit of the compact sequence otherwise
+            from repro.kernels.mega_query.ops import mega_search
+            return mega_search(self, params, members, base, queries,
+                               delta_members, tombstone)
         cands = self.candidates(params, members, queries, delta_members,
                                 tombstone)
         if self.mode == "compact":
@@ -440,6 +470,14 @@ class QueryPipeline:
             with obs.trace(reg, "serve_stage_seconds", stage=stage) as sp:
                 return sp.fence(fn(self, *args))
 
+        if self.mode == "mega":
+            # the whole fused search IS the stage: one dispatch, one timing
+            # bucket, plus a dispatch counter the obs smoke asserts on
+            out = run("mega", _stage_mega, params, members, base, queries,
+                      delta_members, tombstone)
+            reg.counter("serve_mega_dispatch_total").inc()
+            return out
+
         logits = run("scorer_logits", _stage_logits, params, queries)
         bidx, keep = run("top_m", _stage_topm, logits)
         cands = run("gather", _stage_gather, members, bidx, keep,
@@ -469,6 +507,17 @@ class QueryPipeline:
 # verbatim slice of the fused search()/candidates() code it mirrors: the
 # staged-vs-fused bit-identity pin (acceptance criterion) rests on the op
 # sequences being the same.
+
+@partial(jax.jit, static_argnames=("pipe",))
+def _stage_mega(pipe: QueryPipeline, params, members, base, queries,
+                delta_members, tombstone):
+    """mode="mega" as one staged unit: jitting the compact twin's search
+    here reproduces ops._fused's trace exactly, so the staged path stays
+    bit-identical to the fused one (the test_obs_integration pin)."""
+    compact = dataclasses.replace(pipe, mode="compact")
+    return compact.search(params, members, base, queries, delta_members,
+                          tombstone)
+
 
 @partial(jax.jit, static_argnames=("pipe",))
 def _stage_logits(pipe: QueryPipeline, params, queries):

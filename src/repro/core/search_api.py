@@ -33,7 +33,7 @@ import jax
 from repro.core import query as Q
 
 _METRICS = ("angular", "l2")
-_MODES = ("auto", "dense", "compact")
+_MODES = ("auto", "dense", "compact", "mega")
 _STORE_DTYPES = ("fp32", "int8", "bf16")   # mirrors store.quantized
 
 
@@ -53,7 +53,7 @@ class SearchParams:
     k: int = 10                # final top-k
     topC: int = 1024           # compact-mode candidate budget per query
     metric: str = "angular"    # "angular" | "l2"
-    mode: str = "auto"         # "auto" | "dense" | "compact"
+    mode: str = "auto"         # "auto" | "dense" | "compact" | "mega"
     store_dtype: str = "fp32"  # vector tier: "fp32" | "int8" | "bf16"
     refine_k: int = 0          # exact-refine depth k' (0 = auto: max(4k,32))
     adaptive_m: bool = False   # LIRA-style per-query probe count m(q):
@@ -104,16 +104,20 @@ class SearchParams:
         return dataclasses.replace(self, **kw)
 
     def resolve(self, n_labels: int, q_batch: int = 512) -> "SearchParams":
-        """Materialize ``mode="auto"`` against the corpus + batch size (same
-        rule as ``query.select_mode``: dense while the [q_batch, n_labels]
-        tables fit the budget — accounting CODE bytes: a quantized
-        ``store_dtype`` always resolves compact, since dense would decode
-        the whole store to fp32). Resolved params are the cache key."""
+        """Materialize ``mode="auto"`` against the corpus + batch size (the
+        ``query.select_mode`` rule: dense while the [q_batch, n_labels]
+        tables fit the budget — accounting CODE bytes, so a quantized
+        ``store_dtype`` never resolves dense; otherwise the fused
+        megakernel "mega" when this request's (m, topC, refine_k, k) tile
+        footprint fits the VMEM budget (``mega_fits``), compact as the
+        universal fallback). Resolved params are the cache key."""
         if self.mode != "auto":
             return self
         return self.replace(
             mode=Q.select_mode(n_labels, q_batch,
-                               store_dtype=self.store_dtype))
+                               store_dtype=self.store_dtype,
+                               m=self.m, topC=self.topC,
+                               refine_k=self.refine_k, k=self.k))
 
     def pipeline(self) -> Q.QueryPipeline:
         """The QueryPipeline realizing these params. Resolve first."""
@@ -138,8 +142,8 @@ class SearchResult:
     ``n_candidates`` the per-query survivor count (capped at ``topC`` in
     compact mode, summed over shards on the distributed surfaces),
     ``epoch`` the snapshot epoch served (0 for frozen indexes), and
-    ``mode`` the backend that actually ran ("dense" | "compact") after
-    auto-resolution.
+    ``mode`` the backend that actually ran ("dense" | "compact" | "mega")
+    after auto-resolution.
     """
     ids: Any
     scores: Any

@@ -16,4 +16,21 @@ ANY = MemorySpace.ANY       # compiler-chosen (HBM for big tables)
 VMEM = _pltpu.VMEM          # fast on-chip vector memory (scratch ctor)
 SMEM = _pltpu.SMEM          # scalar memory (scratch ctor)
 
-__all__ = ["MemorySpace", "ANY", "VMEM", "SMEM"]
+
+def vmem_limit_bytes(n: int):
+    """The ``compiler_params`` value capping a kernel's VMEM allocation at
+    ``n`` bytes — the megakernel passes its ops.mega_fits budget through
+    here so an accounting bug surfaces as a compile error, not an OOM.
+
+    Same one-place-breaks compat rule as the memory spaces above: the
+    params class has been renamed across jax releases (0.4.x:
+    ``pltpu.TPUCompilerParams``; later: ``pltpu.CompilerParams``), so the
+    spelling is resolved HERE instead of version-sniffed at every
+    pallas_call."""
+    cls = getattr(_pltpu, "CompilerParams", None)
+    if cls is None:                          # jax 0.4.x spelling
+        cls = _pltpu.TPUCompilerParams
+    return cls(vmem_limit_bytes=int(n))
+
+
+__all__ = ["MemorySpace", "ANY", "VMEM", "SMEM", "vmem_limit_bytes"]

@@ -84,8 +84,12 @@ def _bitonic_sort(key, payload=None):
     return key, payload
 
 
-def _kernel(cands_ref, ids_ref, cnt_ref, *, n: int, C: int):
-    x = cands_ref[...]                                   # [TQ, n] int32
+def freq_topc_tile(x, *, n: int, C: int):
+    """The FrequentOnes tile body: candidates [TQ, n] int32 (pad -1, n a
+    power of two) -> (ids [TQ, C] int32 with -1 pads, counts [TQ, C] f32).
+    Pure vector ops over one VMEM-resident tile — shared by this kernel and
+    the fused mega-query pipeline (kernels/mega_query), whose frequency
+    stage must count EXACTLY like the standalone dispatch."""
     x = jnp.where(x < 0, _SENT, x)
     s, _ = _bitonic_sort(x)                              # ascending, pads last
 
@@ -108,8 +112,14 @@ def _kernel(cands_ref, ids_ref, cnt_ref, *, n: int, C: int):
     skey, sval = _bitonic_sort(-key, payload=s)          # ascending(-key) = desc
     top_cnt = (-skey[:, :C]) // n
     top_ids = sval[:, :C]
-    ids_ref[...] = jnp.where(top_cnt > 0, top_ids, -1)
-    cnt_ref[...] = jnp.maximum(top_cnt, 0).astype(jnp.float32)
+    return (jnp.where(top_cnt > 0, top_ids, -1),
+            jnp.maximum(top_cnt, 0).astype(jnp.float32))
+
+
+def _kernel(cands_ref, ids_ref, cnt_ref, *, n: int, C: int):
+    ids, cnt = freq_topc_tile(cands_ref[...], n=n, C=C)
+    ids_ref[...] = ids
+    cnt_ref[...] = cnt
 
 
 @functools.partial(jax.jit, static_argnames=("C", "tq", "interpret"))

@@ -1,0 +1,8 @@
+# Fused single-dispatch query megakernel (QueryPipeline mode="mega"):
+# logits -> top-m buckets -> DMA member gather -> frequency top-C ->
+# coarse rerank -> optional exact refine, all in ONE kernel launch.
+#   mega_query.py  — the Pallas pipeline (VMEM-resident candidate set,
+#                    double-buffered async-copy member/code row DMA)
+#   ops.py         — the ONE dispatch site (mega_search) + VMEM budgeting
+#                    + the query.mega_single_dispatch contract
+#   ref.py         — jnp oracle: literally the compact-mode op sequence

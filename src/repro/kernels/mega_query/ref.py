@@ -1,0 +1,46 @@
+"""jnp oracle for the mega-query kernel: the compact-mode stage sequence.
+
+``mega_search_ref`` is BY CONSTRUCTION the exact op sequence of
+``QueryPipeline.search`` with ``mode="compact"`` — it calls the same
+helpers (scorer_logits, gather_members, frequency_topC, rerank_gathered /
+rerank_two_stage) in the same order, so mode="mega"'s bit-identity claim
+against mode="compact" and the interpret-mode kernel parity test
+(tests/test_mega_query.py) share one reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mega_search_ref(params, members, base, queries, delta_members=None,
+                    tombstone=None, *, m: int, tau: int, topC: int, k: int,
+                    refine_k: int = 0, metric: str = "angular",
+                    adaptive_m: bool = False, probe_mass: float = 1.0):
+    """(ids [Q, k], scores [Q, k], n_candidates [Q]) — the compact path.
+
+    ``base`` is a raw fp32 [L, d] array or a QuantizedStore; quantized
+    stores run the tiered coarse+refine rerank exactly like compact mode.
+    """
+    from repro.core import query as Q
+    from repro.store.quantized import QuantizedStore
+
+    store = base if isinstance(base, QuantizedStore) else None
+    logits = Q.scorer_logits(params, queries)
+    vals, bidx = jax.lax.top_k(logits, m)
+    keep = (Q.probe_keep_mask(logits, vals, probe_mass)
+            if adaptive_m and probe_mass < 1.0 else None)
+    cands = Q.gather_members(members, bidx, delta_members, probe_keep=keep)
+    if tombstone is not None:
+        cands = Q.mask_tombstones(cands, tombstone)
+    cid, cnt = Q.frequency_topC(cands, topC)
+    if store is not None and store.dtype != "fp32":
+        from repro.store.rerank import rerank_two_stage
+        ids, scores = rerank_two_stage(queries, store, cid, cnt, tau=tau,
+                                       k=k, refine_k=refine_k, metric=metric)
+    else:
+        rows = store.codes if store is not None else base
+        ids, scores = Q.rerank_gathered(queries, rows, cid, cnt, tau, k,
+                                        metric)
+    n_cand = jnp.sum((cid >= 0) & (cnt >= tau), axis=1)
+    return ids, scores, n_cand

@@ -20,10 +20,11 @@ contracts run on CPU; set before jax init):
     PYTHONPATH=src python -m repro.launch.audit --list
     PYTHONPATH=src python -m repro.launch.audit --seed-violation dense_table
 
-``--seed-violation {dense_table,drop_donation,extra_retrace}`` registers a
-deliberately-violating contract and audits it alone — the self-test that
-each analyzer actually detects the regression class it guards against
-(asserted by tests/test_analysis.py via subprocess).
+``--seed-violation {dense_table,drop_donation,extra_retrace,
+split_dispatch}`` registers a deliberately-violating contract and audits it
+alone — the self-test that each analyzer actually detects the regression
+class it guards against (asserted by tests/test_analysis.py via
+subprocess).
 """
 import argparse
 import json
@@ -109,9 +110,32 @@ def _seed_extra_retrace():
     )
 
 
+def _seed_split_dispatch():
+    """The compact query path run as six separate stage jits — six
+    top-level dispatches under the megakernel's single-dispatch contract.
+    The dispatch counter must fail it, the way it would a refactor that
+    quietly hoisted a stage back out of the fused mega path."""
+    from repro.analysis import contracts as C
+
+    def fixture():
+        from repro.analysis import fixtures as FX
+        return FX.mega_split_control()
+
+    return C.Contract(
+        id="seeded.split_dispatch",
+        site="repro.launch.audit --seed-violation split_dispatch",
+        description="deliberate violation: per-stage dispatch sequence "
+                    "under the mega single-dispatch contract",
+        fixture=fixture,
+        checks=[C.max_dispatches(1)],
+        control=fixture,
+    )
+
+
 SEEDED = {"dense_table": _seed_dense_table,
           "drop_donation": _seed_drop_donation,
-          "extra_retrace": _seed_extra_retrace}
+          "extra_retrace": _seed_extra_retrace,
+          "split_dispatch": _seed_split_dispatch}
 
 
 # ---------------------------------------------------------------- reporting --

@@ -83,6 +83,18 @@ def main():
     fused = SearchParams(m=4, tau=1, k=10, mode="compact")
     for _ in range(2):
         midx.search(data.queries[:8], fused, cache=server.cache)
+    # the megakernel path: staged mode="mega" serves the whole query as ONE
+    # dispatch, records a stage="mega" histogram + the dispatch counter the
+    # single-dispatch contract pins, and must stay bit-identical to compact
+    ref = midx.search(data.queries[:8], fused, cache=server.cache)
+    mega = SearchParams(m=4, tau=1, k=10, mode="mega")
+    for _ in range(2):
+        got = midx.search(data.queries[:8], mega, cache=server.cache,
+                          staged=True)
+    for a, b in ((got.ids, ref.ids), (got.scores, ref.scores),
+                 (got.n_candidates, ref.n_candidates)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+            "mode='mega' diverged from the compact path"
 
     # ---- online refit: one cycle off the server's query log + one swap ---
     from repro.online import OnlineRefitLoop, RefitConfig
@@ -109,9 +121,11 @@ def main():
     assert snap["artifact_version"]["value"] == midx.epoch
     stages = sorted(k for k in snap if k.startswith("serve_stage_seconds"))
     assert stages, f"no per-stage histograms: {sorted(snap)}"
-    for stage in ("scorer_logits", "top_m", "gather", "freq_topc"):
+    for stage in ("scorer_logits", "top_m", "gather", "freq_topc", "mega"):
         assert any(f'stage="{stage}"' in k for k in stages), \
             f"stage {stage!r} missing from {stages}"
+    assert snap["serve_mega_dispatch_total"]["value"] >= 2, \
+        "mega staged serves did not count dispatches"
     for key in ("serve_requests_total", "serve_batches_total",
                 "serve_queue_wait_seconds", "serve_batch_seconds",
                 "serve_candidates", "serve_bucket_probes",

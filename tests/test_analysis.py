@@ -140,7 +140,8 @@ def test_pipeline_cache_compiles_once_per_key():
 
 # ------------------------------------------------- audit CLI self-violation --
 @pytest.mark.parametrize("seed",
-                         ["dense_table", "drop_donation", "extra_retrace"])
+                         ["dense_table", "drop_donation", "extra_retrace",
+                          "split_dispatch"])
 def test_seeded_violation_detected(seed, tmp_path):
     """`--seed-violation X` registers a deliberately broken program; the
     audit MUST exit 1 (exit 2 would mean the analyzer is blind, exit 0

@@ -64,7 +64,11 @@ def test_params_hashable_and_resolution():
     a, b = SearchParams(m=4), SearchParams(m=4)
     assert a == b and hash(a) == hash(b) and len({a, b}) == 1
     assert SearchParams().resolve(1_000).mode == "dense"
-    assert SearchParams().resolve(100_000_000).mode == "compact"
+    # beyond the dense budget the default search shape fits the megakernel
+    assert SearchParams().resolve(100_000_000).mode == "mega"
+    # an oversized search shape falls back to the staged compact path
+    assert SearchParams(m=512, topC=32768).resolve(
+        100_000_000).mode == "compact"
     # an explicit mode survives resolution untouched
     assert SearchParams(mode="compact").resolve(1_000).mode == "compact"
     with pytest.raises(ValueError, match="resolve"):
